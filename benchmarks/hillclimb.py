@@ -1,0 +1,64 @@
+"""§Perf hillclimb driver: measure roofline terms for one (arch x shape) pair
+under a set of implementation-variant env flags, WITHOUT touching the cached
+baseline artifacts.
+
+Usage:
+  PYTHONPATH=src python -m benchmarks.hillclimb --arch deepseek-7b \
+      --shape decode_32k --set REPRO_CACHE_MODE=carry
+"""
+import os
+os.environ.setdefault("XLA_FLAGS", "--xla_force_host_platform_device_count=512")
+
+import argparse
+import json
+
+
+def main() -> None:
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--arch", required=True)
+    ap.add_argument("--shape", required=True)
+    ap.add_argument("--set", action="append", default=[],
+                    help="VAR=value env flags for the variant under test")
+    ap.add_argument("--tag", default="variant")
+    args = ap.parse_args()
+    for kv in args.set:
+        k, v = kv.split("=", 1)
+        os.environ[k] = v
+
+    from repro.configs import get_config, get_shape
+    from repro.launch.dryrun import (analyze, component_analysis,
+                                     lower_and_compile)
+    from repro.launch.mesh import make_production_mesh
+
+    PEAK, HBM, ICI = 197e12, 819e9, 50e9
+    cfg = get_config(args.arch)
+    shape = get_shape(args.shape)
+    if os.environ.get("REPRO_MESH") == "moe" and cfg.moe:
+        mesh = make_production_mesh(moe_experts=cfg.moe.num_experts)
+    else:
+        mesh = make_production_mesh()
+    compiled, times = lower_and_compile(cfg, shape, mesh)
+    full = analyze(compiled)
+    del compiled
+    ex = component_analysis(cfg, shape, mesh)
+    rec = {"arch": args.arch, "shape": args.shape, "tag": args.tag,
+           "env": args.set, "full": full, "extrapolated": ex,
+           "t_compute": ex["hlo_flops"] / PEAK,
+           "t_memory": ex["hlo_bytes"] / HBM,
+           "t_collective": ex["collective_bytes"] / ICI}
+    out_dir = os.path.join(os.path.dirname(__file__), "..", "experiments", "perf")
+    os.makedirs(out_dir, exist_ok=True)
+    path = os.path.join(out_dir, f"{args.arch}__{args.shape}__{args.tag}.json")
+    with open(path, "w") as f:
+        json.dump(rec, f, indent=2)
+    print(f"{args.tag}: t_compute={rec['t_compute']:.4e}s "
+          f"t_memory={rec['t_memory']:.4e}s t_collective={rec['t_collective']:.4e}s")
+    print(f"  temp/dev={full.get('temp_size_in_bytes', 0) / 2**30:.2f}GiB "
+          f"args/dev={full.get('argument_size_in_bytes', 0) / 2**30:.2f}GiB")
+    print(f"  coll detail: " + " ".join(
+        f"{k}={v:.3e}" for k, v in ex.items() if k.startswith("coll_")))
+    print(f"  -> {path}")
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,45 @@
+"""Wall-clock microbenchmarks of the real JAX serving/training steps
+(reduced configs — CPU container; TPU numbers come from the roofline)."""
+from __future__ import annotations
+
+import time
+from typing import List
+
+import jax
+import jax.numpy as jnp
+
+from repro.configs import get_config
+from repro.models import model as M
+from repro.serving.engine import InferenceEngine
+from repro.training import data as D
+from repro.training import optimizer as OPT
+from repro.training.train import make_train_step
+
+
+def _bench(fn, *args, iters: int = 5):
+    fn(*args)  # compile
+    t0 = time.perf_counter()
+    for _ in range(iters):
+        out = fn(*args)
+    jax.block_until_ready(out)
+    return (time.perf_counter() - t0) / iters * 1e6
+
+
+def serving_microbench() -> List:
+    rows = []
+    cfg = get_config("smollm-360m").reduced()
+    params = M.init_params(cfg, jax.random.PRNGKey(0))
+    eng = InferenceEngine(cfg, params, max_len=128)
+    batch = {"tokens": jnp.zeros((4, 32), jnp.int32)}
+    logits, cache = eng.prefill(batch)
+    rows.append(["prefill_b4_s32", _bench(lambda: eng.prefill(batch)[0])])
+    tok = jnp.zeros((4, 1), jnp.int32)
+    rows.append(["decode_b4", _bench(lambda: eng.decode(tok, cache)[0])])
+
+    opt = OPT.AdamWConfig()
+    step = jax.jit(make_train_step(cfg, opt))
+    state = OPT.init_state(params)
+    tb = next(D.uniform_stream(cfg, 4, 64, 1))
+    rows.append(["train_step_b4_s64",
+                 _bench(lambda: step(params, state, tb)[2]["loss"])])
+    return rows

@@ -1,0 +1,172 @@
+"""Benchmarks reproducing the paper's figures/tables from the calibrated
+analytic model. One function per figure; each returns CSV rows
+(name, value, derived...) and writes experiments/bench/<name>.csv.
+"""
+from __future__ import annotations
+
+import os
+from typing import List
+
+import numpy as np
+
+from repro.configs import get_config, list_paper_archs
+from repro.core import (CostOptimalScheduler, CapacityAwareScheduler, Query,
+                        SingleSystemScheduler, ThresholdScheduler, alpaca_like,
+                        crossover_threshold, energy, energy_per_token_in,
+                        energy_per_token_out, headline, optimal_threshold,
+                        paper_fleet, runtime, simulate, threshold_sweep,
+                        throughput, token_histogram, tpu_fleet)
+
+OUT_DIR = os.path.join(os.path.dirname(__file__), "..", "experiments", "bench")
+
+INPUT_SIZES = [8, 16, 32, 64, 128, 256, 512, 1024, 2048]      # paper 5.2.1
+OUTPUT_SIZES = [8, 16, 32, 64, 128, 256, 512, 1024, 2048, 4096]  # paper 5.2.2
+PAPER_MODELS = ("llama2-7b", "mistral-7b", "falcon-7b")
+
+
+def _write(name: str, header: List[str], rows: List[List]) -> str:
+    os.makedirs(OUT_DIR, exist_ok=True)
+    path = os.path.join(OUT_DIR, f"{name}.csv")
+    with open(path, "w") as f:
+        f.write(",".join(header) + "\n")
+        for r in rows:
+            f.write(",".join(str(x) for x in r) + "\n")
+    return path
+
+
+def fig1_input_tokens() -> List[List]:
+    """Fig 1: runtime / throughput / J-per-token vs input tokens (out=32)."""
+    eff, perf = paper_fleet()
+    rows = []
+    for model in PAPER_MODELS:
+        cfg = get_config(model)
+        for s in (eff, perf):
+            for m in INPUT_SIZES:
+                rows.append([model, s.name, m,
+                             f"{runtime(cfg, m, 32, s):.4f}",
+                             f"{throughput(cfg, m, 32, s):.2f}",
+                             f"{energy_per_token_in(cfg, m, s):.4f}"])
+    _write("fig1_input_tokens",
+           ["model", "system", "input_tokens", "runtime_s", "tok_per_s", "j_per_tok"],
+           rows)
+    return rows
+
+
+def fig2_output_tokens() -> List[List]:
+    """Fig 2: runtime / throughput / J-per-token vs output tokens (in=32).
+    M1-Pro rows stop at 512 (paper: generation cap)."""
+    eff, perf = paper_fleet()
+    rows = []
+    for model in PAPER_MODELS:
+        cfg = get_config(model)
+        for s in (eff, perf):
+            for n in OUTPUT_SIZES:
+                if s.max_out_tokens and n > s.max_out_tokens:
+                    continue
+                rows.append([model, s.name, n,
+                             f"{runtime(cfg, 32, n, s):.4f}",
+                             f"{throughput(cfg, 32, n, s):.2f}",
+                             f"{energy_per_token_out(cfg, n, s):.4f}"])
+    _write("fig2_output_tokens",
+           ["model", "system", "output_tokens", "runtime_s", "tok_per_s", "j_per_tok"],
+           rows)
+    return rows
+
+
+def fig3_token_distribution() -> List[List]:
+    """Fig 3: Alpaca token-count distributions (52K prompts)."""
+    qs = alpaca_like(52_000, seed=0)
+    rows = []
+    for axis in ("in", "out"):
+        freq, centers = token_histogram(qs, axis=axis,
+                                        bins=np.array([1, 8, 16, 32, 64, 128,
+                                                       256, 512, 1024, 2048, 4096]))
+        for f, c in zip(freq, centers):
+            rows.append([axis, int(c), int(f)])
+    ms = [q.m for q in qs]
+    ns = [q.n for q in qs]
+    rows.append(["in_median", int(np.median(ms)), len(qs)])
+    rows.append(["out_median", int(np.median(ns)), len(qs)])
+    _write("fig3_token_distribution", ["axis", "bin_start", "count"], rows)
+    return rows
+
+
+def fig4_input_threshold_sweep() -> List[List]:
+    """Fig 4: hybrid energy/runtime vs T_in, with single-hardware dashed lines."""
+    return _threshold_fig("fig4_input_threshold", axis="in")
+
+
+def fig5_output_threshold_sweep() -> List[List]:
+    """Fig 5: hybrid energy/runtime vs T_out (<=512 per the M1 cap)."""
+    return _threshold_fig("fig5_output_threshold", axis="out")
+
+
+def _threshold_fig(name: str, axis: str) -> List[List]:
+    eff, perf = paper_fleet()
+    cfg = get_config("llama2-7b")
+    qs = alpaca_like(10_000, seed=0)
+    pinned = [Query(q.m, 32) if axis == "in" else Query(32, q.n) for q in qs]
+    rows = []
+    for pol, sched in (("all_eff", SingleSystemScheduler(cfg, eff)),
+                       ("all_perf", SingleSystemScheduler(cfg, perf))):
+        r = simulate(cfg, pinned, sched, pol)
+        rows.append([pol, "-", f"{r.total_energy_j:.1f}", f"{r.total_runtime_s:.1f}"])
+    sweep = threshold_sweep(cfg, qs, eff, perf, axis=axis)
+    for p in sweep:
+        rows.append([f"hybrid_T{axis}", p.threshold, f"{p.energy_j:.1f}",
+                     f"{p.runtime_s:.1f}"])
+    best = optimal_threshold(sweep)
+    rows.append([f"optimal_T{axis}", best.threshold, f"{best.energy_j:.1f}",
+                 f"{best.runtime_s:.1f}"])
+    _write(name, ["policy", "threshold", "energy_j", "runtime_s"], rows)
+    return rows
+
+
+def headline_table() -> List[List]:
+    """The paper's headline: hybrid savings vs workload-unaware baselines —
+    plus our beyond-paper schedulers, on paper fleet AND TPU fleet."""
+    rows = []
+    qs = alpaca_like(10_000, seed=0)
+    for fleet_name, (eff, perf) in (("paper_m1+a100", paper_fleet()),
+                                    ("tpu_v5litex+v5e", tpu_fleet())):
+        for model in ("llama2-7b",):
+            cfg = get_config(model)
+            hd = headline(cfg, qs, eff, perf, t_in=32, axis="in")
+            rows.append([fleet_name, model, "threshold_in32_eq9",
+                         f"{hd.hybrid.total_energy_j:.0f}",
+                         f"{hd.savings_vs_best_baseline:.4f}",
+                         f"{hd.savings_vs_all_perf:.4f}",
+                         f"{hd.runtime_penalty_vs_all_perf:.4f}"])
+            hd2 = headline(cfg, qs, eff, perf, t_in=32, axis="both",
+                           paper_faithful=False)
+            rows.append([fleet_name, model, "threshold_both32_joint",
+                         f"{hd2.hybrid.total_energy_j:.0f}",
+                         f"{hd2.savings_vs_best_baseline:.4f}",
+                         f"{hd2.savings_vs_all_perf:.4f}",
+                         f"{hd2.runtime_penalty_vs_all_perf:.4f}"])
+            co = simulate(cfg, qs, CostOptimalScheduler(cfg, [eff, perf]))
+            ap = simulate(cfg, qs, SingleSystemScheduler(cfg, perf))
+            rows.append([fleet_name, model, "cost_optimal_joint",
+                         f"{co.total_energy_j:.0f}",
+                         f"{(ap.total_energy_j - co.total_energy_j) / ap.total_energy_j:.4f}",
+                         f"{(ap.total_energy_j - co.total_energy_j) / ap.total_energy_j:.4f}",
+                         f"{(co.total_runtime_s - ap.total_runtime_s) / ap.total_runtime_s:.4f}"])
+    _write("headline_table",
+           ["fleet", "model", "policy", "energy_j", "savings_vs_best",
+            "savings_vs_all_perf", "runtime_penalty"], rows)
+    return rows
+
+
+def crossover_table() -> List[List]:
+    """Per-architecture crossover thresholds on both fleets — shows the
+    technique generalizing across all 10 assigned architectures."""
+    from repro.configs import list_archs
+    rows = []
+    for fleet_name, (eff, perf) in (("paper", paper_fleet()), ("tpu", tpu_fleet())):
+        for arch in list_archs():
+            cfg = get_config(arch)
+            t_in = crossover_threshold(cfg, eff, perf, axis="in", hi=8192)
+            t_out = crossover_threshold(cfg, eff, perf, axis="out", hi=8192)
+            rows.append([fleet_name, arch, t_in, t_out])
+    _write("crossover_table", ["fleet", "arch", "t_in_crossover", "t_out_crossover"], rows)
+    return rows

@@ -1,0 +1,143 @@
+"""Roofline analysis over the dry-run artifacts (deliverable g).
+
+Reads experiments/dryrun/*.json and derives, per (arch x shape x mesh):
+
+    compute term    = HLO_FLOPs_per_device   / peak_FLOP/s per chip
+    memory term     = HLO_bytes_per_device   / HBM bandwidth per chip
+    collective term = collective_bytes/devc  / ICI link bandwidth
+
+(The SPMD module is per-device, so per-device work over per-chip rates is the
+step-time lower bound; multiplying both sides by #chips gives the global
+formulation from the brief.) FLOPs/bytes come from the unrolled L=1/L=2
+component extrapolation because XLA's cost analysis counts while-loop bodies
+once (verified); collective bytes likewise.
+
+Hardware constants (TPU v5e): 197 TFLOP/s bf16, 819 GB/s HBM, ~50 GB/s/link.
+"""
+from __future__ import annotations
+
+import glob
+import json
+import os
+from dataclasses import dataclass
+from typing import Dict, List, Optional
+
+from repro.configs import get_config, get_shape
+
+PEAK_FLOPS = 197e12
+HBM_BW = 819e9
+ICI_BW = 50e9
+HBM_PER_CHIP = 16e9          # v5e 16 GB
+
+DRYRUN_DIR = os.path.join(os.path.dirname(__file__), "..", "experiments", "dryrun")
+OUT_DIR = os.path.join(os.path.dirname(__file__), "..", "experiments", "bench")
+
+
+@dataclass
+class RooflineRow:
+    arch: str
+    shape: str
+    mesh: str
+    status: str
+    t_compute: float = 0.0
+    t_memory: float = 0.0
+    t_collective: float = 0.0
+    dominant: str = ""
+    model_flops: float = 0.0
+    hlo_flops_global: float = 0.0
+    useful_ratio: float = 0.0
+    bytes_per_device: float = 0.0
+    fits: bool = True
+    note: str = ""
+
+
+def model_flops(arch: str, shape_name: str) -> float:
+    """MODEL_FLOPS: 6*N_active*D for training, 2*N_active*D forward-only."""
+    cfg = get_config(arch)
+    shape = get_shape(shape_name)
+    n = cfg.active_param_count()
+    if shape.kind == "train":
+        toks = shape.global_batch * shape.seq_len
+        return 6.0 * n * toks
+    if shape.kind == "prefill":
+        toks = shape.global_batch * shape.seq_len
+        return 2.0 * n * toks
+    toks = shape.global_batch  # one token per request
+    return 2.0 * n * toks
+
+
+def _recommendation(row: RooflineRow) -> str:
+    if row.dominant == "compute":
+        if row.useful_ratio < 0.5:
+            return ("compute-bound with low useful ratio: cut redundant/remat "
+                    "FLOPs (attention mask rectangle, MoE dead capacity)")
+        return "compute-bound near roof: only larger mesh or lower precision helps"
+    if row.dominant == "memory":
+        return ("memory-bound: widen batch to amortize weight streaming, or "
+                "shard the dominant resident tensor (KV/optimizer) further")
+    return ("collective-bound: reshard to cut all-gathers (activation vs "
+            "weight layout), overlap collectives with compute")
+
+
+def analyze_all(mesh: str = "16x16") -> List[RooflineRow]:
+    rows = []
+    for path in sorted(glob.glob(os.path.join(DRYRUN_DIR, f"*__{mesh}.json"))):
+        rec = json.load(open(path))
+        row = RooflineRow(rec["arch"], rec["shape"], rec["mesh"], rec["status"])
+        if rec["status"] != "OK":
+            row.note = rec.get("reason", rec.get("error", ""))[:120]
+            rows.append(row)
+            continue
+        ex = rec.get("extrapolated") or {}
+        full = rec["full"]
+        flops_dev = ex.get("hlo_flops", full["hlo_flops_raw"])
+        bytes_dev = ex.get("hlo_bytes", full["hlo_bytes_raw"])
+        coll_dev = ex.get("collective_bytes", 0.0)
+        row.t_compute = flops_dev / PEAK_FLOPS
+        row.t_memory = bytes_dev / HBM_BW
+        row.t_collective = coll_dev / ICI_BW
+        terms = {"compute": row.t_compute, "memory": row.t_memory,
+                 "collective": row.t_collective}
+        row.dominant = max(terms, key=terms.get)
+        row.model_flops = model_flops(rec["arch"], rec["shape"])
+        chips = 512 if mesh == "2x16x16" else 256
+        row.hlo_flops_global = flops_dev * chips
+        row.useful_ratio = (row.model_flops / row.hlo_flops_global
+                            if row.hlo_flops_global else 0.0)
+        resident = (full.get("argument_size_in_bytes", 0)
+                    + full.get("temp_size_in_bytes", 0))
+        row.bytes_per_device = resident
+        row.fits = resident <= HBM_PER_CHIP
+        row.note = _recommendation(row)
+        rows.append(row)
+    return rows
+
+
+def write_csv(rows: List[RooflineRow], name: str = "roofline") -> str:
+    os.makedirs(OUT_DIR, exist_ok=True)
+    path = os.path.join(OUT_DIR, f"{name}.csv")
+    with open(path, "w") as f:
+        f.write("arch,shape,mesh,status,t_compute_s,t_memory_s,t_collective_s,"
+                "dominant,model_flops,hlo_flops_global,useful_ratio,"
+                "resident_bytes_per_dev,fits_16GB,note\n")
+        for r in rows:
+            f.write(f"{r.arch},{r.shape},{r.mesh},{r.status},{r.t_compute:.6e},"
+                    f"{r.t_memory:.6e},{r.t_collective:.6e},{r.dominant},"
+                    f"{r.model_flops:.4e},{r.hlo_flops_global:.4e},"
+                    f"{r.useful_ratio:.4f},{r.bytes_per_device:.4e},"
+                    f"{int(r.fits)},\"{r.note}\"\n")
+    return path
+
+
+def markdown_table(rows: List[RooflineRow]) -> str:
+    out = ["| arch | shape | t_comp (s) | t_mem (s) | t_coll (s) | bound | "
+           "useful | fits |",
+           "|---|---|---|---|---|---|---|---|"]
+    for r in rows:
+        if r.status != "OK":
+            out.append(f"| {r.arch} | {r.shape} | - | - | - | {r.status} | - | - |")
+            continue
+        out.append(f"| {r.arch} | {r.shape} | {r.t_compute:.2e} | "
+                   f"{r.t_memory:.2e} | {r.t_collective:.2e} | {r.dominant} | "
+                   f"{r.useful_ratio:.2f} | {'Y' if r.fits else 'N'} |")
+    return "\n".join(out)

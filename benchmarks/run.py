@@ -1,0 +1,66 @@
+"""Benchmark driver: one function per paper table/figure.
+Prints ``name,us_per_call,derived`` CSV rows (us_per_call = wall time of the
+bench itself; derived = the figure's headline quantity).
+"""
+from __future__ import annotations
+
+import sys
+import time
+
+
+def _timed(name, fn, derive):
+    t0 = time.perf_counter()
+    rows = fn()
+    us = (time.perf_counter() - t0) * 1e6
+    print(f"{name},{us:.0f},{derive(rows)}")
+    return rows
+
+
+def main() -> None:
+    from benchmarks import paper_figs as F
+    from benchmarks import roofline as R
+
+    print("name,us_per_call,derived")
+
+    _timed("fig1_input_tokens", F.fig1_input_tokens,
+           lambda rows: f"rows={len(rows)}")
+    _timed("fig2_output_tokens", F.fig2_output_tokens,
+           lambda rows: f"rows={len(rows)}")
+    _timed("fig3_token_distribution", F.fig3_token_distribution,
+           lambda rows: f"bins={len(rows)}")
+
+    def best_T(rows):
+        return "T*=" + str(next(r[1] for r in rows if str(r[0]).startswith("optimal")))
+    _timed("fig4_input_threshold", F.fig4_input_threshold_sweep, best_T)
+    _timed("fig5_output_threshold", F.fig5_output_threshold_sweep, best_T)
+
+    def headline_savings(rows):
+        eq9 = next(r for r in rows if r[2] == "threshold_in32_eq9")
+        return f"savings_vs_best={float(eq9[4]):.1%}(paper:7.5%)"
+    _timed("headline_table", F.headline_table, headline_savings)
+
+    _timed("crossover_table", F.crossover_table,
+           lambda rows: f"archs={len(rows)}")
+
+    # roofline from dry-run artifacts (if present)
+    def roof(rows=None):
+        rows = R.analyze_all("16x16")
+        R.write_csv(rows)
+        ok = [r for r in rows if r.status == "OK"]
+        dom = {}
+        for r in ok:
+            dom[r.dominant] = dom.get(r.dominant, 0) + 1
+        return rows, f"ok={len(ok)} dominant={dom}"
+
+    t0 = time.perf_counter()
+    rows, derived = roof()
+    print(f"roofline,{(time.perf_counter() - t0) * 1e6:.0f},\"{derived}\"")
+
+    # serving microbench: real jitted steps on a reduced config (CPU wall time)
+    from benchmarks.microbench import serving_microbench
+    _timed("serving_microbench", serving_microbench,
+           lambda rows: ";".join(f"{r[0]}={r[1]:.0f}us" for r in rows))
+
+
+if __name__ == "__main__":
+    main()

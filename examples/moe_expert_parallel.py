@@ -1,0 +1,42 @@
+"""Expert-parallel MoE inference example: shows the MoE architectures running
+with top-k routing and reports router load balance — the substrate the paper's
+scheduler prices via active-vs-total parameter counts.
+
+Run: PYTHONPATH=src python examples/moe_expert_parallel.py
+"""
+import jax
+import jax.numpy as jnp
+
+from repro.configs import get_config
+from repro.core import energy, tpu_fleet
+from repro.models import model as M
+from repro.models import moe as MOE
+
+
+def main():
+    for arch in ("phi3.5-moe-42b-a6.6b", "grok-1-314b"):
+        full = get_config(arch)
+        cfg = full.reduced()
+        params = M.init_params(cfg, jax.random.PRNGKey(0))
+        tok = jax.random.randint(jax.random.PRNGKey(1), (2, 32), 0, cfg.vocab_size)
+        logits, aux = M.forward_train(params, cfg, {"tokens": tok})
+        # router statistics from the first layer
+        lp = jax.tree.map(lambda x: x[0], params["layers"])
+        h = params["embed"]["emb"][tok]
+        route_logits = h.reshape(-1, cfg.d_model) @ lp["moe"]["router"]["w"]
+        choice = jnp.argmax(route_logits, -1)
+        counts = jnp.bincount(choice, length=cfg.moe.num_experts)
+        eff, perf = tpu_fleet()
+        print(f"{arch}:")
+        print(f"  total params {full.param_count() / 1e9:6.1f}B, "
+              f"active {full.active_param_count() / 1e9:5.1f}B "
+              f"(top-{full.moe.num_experts_per_tok} of {full.moe.num_experts})")
+        print(f"  reduced fwd OK, aux load-balance loss {float(aux):.4f}, "
+              f"layer-0 expert loads {counts.tolist()}")
+        print(f"  E(128in,64out): eff {energy(full, 128, 64, eff):7.1f} J | "
+              f"perf {energy(full, 128, 64, perf):7.1f} J "
+              f"(priced on ACTIVE FLOPs, TOTAL weight bytes)\n")
+
+
+if __name__ == "__main__":
+    main()

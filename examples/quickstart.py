@@ -1,0 +1,55 @@
+"""Quickstart: the paper's scheduling technique in five minutes.
+
+1. Price a query on two device classes with the analytic cost model.
+2. Find the energy-optimal threshold on an Alpaca-like workload (paper: 32).
+3. Serve real tokens through the hybrid router on a reduced model.
+
+Run: PYTHONPATH=src python examples/quickstart.py
+"""
+import jax
+import numpy as np
+
+from repro.configs import get_config
+from repro.core import (CostOptimalScheduler, alpaca_like, energy, headline,
+                        optimal_threshold, paper_fleet, runtime, simulate,
+                        threshold_sweep)
+from repro.models import model as M
+from repro.serving.engine import InferenceEngine
+from repro.serving.router import FleetRouter
+
+
+def main():
+    # ---- 1. the cost model: E(m, n, s) and R(m, n, s) ------------------------
+    cfg = get_config("llama2-7b")       # one of the paper's three models
+    eff, perf = paper_fleet()           # M1-Pro, 8xA100 (paper Table 1)
+    for m in (8, 64, 512):
+        ee, ep = energy(cfg, m, 32, eff), energy(cfg, m, 32, perf)
+        print(f"query ({m:4d} in, 32 out): M1-Pro {ee:7.1f} J vs A100 {ep:7.1f} J "
+              f"-> {'efficiency' if ee < ep else 'performance'} pool")
+
+    # ---- 2. the paper's Section 6 analysis -----------------------------------
+    qs = alpaca_like(5000, seed=0)
+    sweep = threshold_sweep(cfg, qs, eff, perf, axis="in")
+    best = optimal_threshold(sweep)
+    hd = headline(cfg, qs, eff, perf, t_in=best.threshold)
+    print(f"\noptimal input threshold T* = {best.threshold} (paper: 32)")
+    print(f"hybrid energy savings vs best workload-unaware baseline: "
+          f"{hd.savings_vs_best_baseline:.1%} (paper: 7.5%)")
+    print(f"runtime penalty vs all-A100: {hd.runtime_penalty_vs_all_perf:.0%} "
+          "(the paper's energy/runtime trade-off)")
+
+    # ---- 3. route + execute real tokens --------------------------------------
+    small = get_config("smollm-360m").reduced()
+    params = M.init_params(small, jax.random.PRNGKey(0))
+    engine = InferenceEngine(small, params, max_len=128)
+    router = FleetRouter(small, {eff.name: eff, perf.name: perf},
+                         {eff.name: engine, perf.name: engine},
+                         policy="threshold", t_in=32)
+    for m in (8, 100):
+        r = router.submit(np.arange(m) % small.vocab_size, 8)
+        print(f"\nserved {m}-token prompt on [{r.pool}]: tokens {r.output.tolist()}")
+    print("\nfleet report:", router.fleet_report())
+
+
+if __name__ == "__main__":
+    main()

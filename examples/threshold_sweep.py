@@ -1,0 +1,49 @@
+"""Reproduce the paper's Figures 4-5 (threshold sweeps) and print the
+ASCII-rendered energy curve with the single-hardware baselines.
+
+Run: PYTHONPATH=src python examples/threshold_sweep.py [--axis in|out]
+"""
+import argparse
+
+from repro.configs import get_config
+from repro.core import (SingleSystemScheduler, Query, alpaca_like,
+                        optimal_threshold, paper_fleet, simulate,
+                        threshold_sweep)
+
+
+def bar(value, lo, hi, width=50):
+    n = int((value - lo) / (hi - lo + 1e-9) * width)
+    return "#" * max(1, n)
+
+
+def main():
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--axis", default="in", choices=("in", "out"))
+    ap.add_argument("--model", default="llama2-7b")
+    ap.add_argument("--queries", type=int, default=10000)
+    args = ap.parse_args()
+
+    cfg = get_config(args.model)
+    eff, perf = paper_fleet()
+    qs = alpaca_like(args.queries, seed=0)
+    pinned = [Query(q.m, 32) if args.axis == "in" else Query(32, q.n) for q in qs]
+    e_eff = simulate(cfg, pinned, SingleSystemScheduler(cfg, eff)).total_energy_j
+    e_perf = simulate(cfg, pinned, SingleSystemScheduler(cfg, perf)).total_energy_j
+    sweep = threshold_sweep(cfg, qs, eff, perf, axis=args.axis)
+    best = optimal_threshold(sweep)
+
+    lo = min(p.energy_j for p in sweep) * 0.95
+    hi = max(e_eff, e_perf, *(p.energy_j for p in sweep))
+    print(f"total energy vs T_{args.axis} ({args.model}, {args.queries} "
+          f"Alpaca-like queries, Eq. {'9' if args.axis == 'in' else '10'}):\n")
+    print(f"  all-{eff.name:14s} {e_eff / 1e3:9.1f} kJ {bar(e_eff, lo, hi)}")
+    print(f"  all-{perf.name:14s} {e_perf / 1e3:9.1f} kJ {bar(e_perf, lo, hi)}")
+    print()
+    for p in sweep:
+        mark = "  <-- optimal (paper: 32)" if p.threshold == best.threshold else ""
+        print(f"  T={p.threshold:5d}  {p.energy_j / 1e3:9.1f} kJ "
+              f"{bar(p.energy_j, lo, hi)}{mark}")
+
+
+if __name__ == "__main__":
+    main()

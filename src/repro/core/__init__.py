@@ -1,0 +1,15 @@
+"""core/: the paper's contribution — cost-based scheduling across a hybrid
+heterogeneous fleet for energy-efficient LLM inference."""
+from repro.core.systems import (SystemProfile, PROFILES, get_profile,
+                                paper_fleet, tpu_fleet)
+from repro.core.perf_model import runtime, throughput, query_phases
+from repro.core.energy import (energy, energy_per_token_in, energy_per_token_out,
+                               crossover_threshold)
+from repro.core.cost import CostParams, cost, normalized_cost_params
+from repro.core.workload import Query, WorkloadSpec, sample_workload, alpaca_like, token_histogram
+from repro.core.scheduler import (Scheduler, ThresholdScheduler, CostOptimalScheduler,
+                                  CapacityAwareScheduler, SingleSystemScheduler,
+                                  RoundRobinScheduler, Assignment)
+from repro.core.simulator import (simulate, summarize, threshold_sweep,
+                                  optimal_threshold, headline, SimResult,
+                                  SweepPoint, HeadlineResult)

@@ -1,0 +1,50 @@
+"""Energy model E(m, n, s): the paper's measured quantity, derived analytically.
+
+E = sum over phases of  P(util) * t_phase, with
+P(util) = chips * (P_idle + (P_peak - P_idle) * util).
+
+This reproduces the paper's central empirical finding structurally:
+  * small queries on a performance-class instance are dominated by
+    (idle+overhead) power x time  -> high J/token;
+  * an efficiency-class device has far lower allocated-idle power, so it wins
+    below a workload threshold, and loses above it where the performance
+    instance reaches high utilization.
+"""
+from __future__ import annotations
+
+from repro.configs.base import ModelConfig
+from repro.core.perf_model import query_phases
+from repro.core.systems import SystemProfile
+
+
+def energy(cfg: ModelConfig, m: int, n: int, s: SystemProfile,
+           batch: int = 1) -> float:
+    """E(m, n, s) in joules (Eq. 1's energy term)."""
+    ph = query_phases(cfg, m, n, s, batch)
+    e = ph.t_prefill * s.power(ph.util_prefill)
+    e += ph.t_decode * s.power(ph.util_decode)
+    e += ph.t_overhead * s.power(0.0)
+    return e
+
+
+def energy_per_token_in(cfg: ModelConfig, m: int, s: SystemProfile,
+                        n_out: int = 32) -> float:
+    """J/token while varying input size (paper Fig 1c protocol: out fixed 32)."""
+    return energy(cfg, m, n_out, s) / max(1, m)
+
+
+def energy_per_token_out(cfg: ModelConfig, n: int, s: SystemProfile,
+                         m_in: int = 32) -> float:
+    """J/token while varying output size (paper Fig 2c protocol: in fixed 32)."""
+    return energy(cfg, m_in, n, s) / max(1, n)
+
+
+def crossover_threshold(cfg: ModelConfig, eff: SystemProfile, perf: SystemProfile,
+                        *, axis: str = "in", lo: int = 1, hi: int = 4096) -> int:
+    """Smallest token count where the performance system's J/token drops below
+    the efficiency system's (the quantity the paper's T_in/T_out estimate)."""
+    fn = energy_per_token_in if axis == "in" else energy_per_token_out
+    for t in range(lo, hi + 1):
+        if fn(cfg, t, perf) < fn(cfg, t, eff):
+            return t
+    return hi

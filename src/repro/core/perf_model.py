@@ -1,0 +1,137 @@
+"""Analytic roofline performance model: R(m, n, s) per architecture.
+
+The paper measures R and E empirically per (model, system); we derive them
+from the architecture config and the system profile so the scheduler can
+price *any* of the 10 assigned architectures on *any* system. The model is
+the standard two-phase LLM-inference roofline:
+
+  prefill:  t = max(FLOPs / peak_flops, weight+activation bytes / hbm_bw)
+  decode:   per-token t at context c, memory term dominated by weight
+            streaming (amortized over batch) + KV/state reads.
+
+The same FLOPs/bytes functions feed the §Roofline analysis — the dry-run's
+compiled cost_analysis validates them (see benchmarks/roofline.py).
+"""
+from __future__ import annotations
+
+import dataclasses
+from dataclasses import dataclass
+
+from repro.configs.base import ModelConfig
+from repro.core.systems import SystemProfile
+
+BYTES_PER_PARAM = 2.0   # bf16 weights
+BYTES_PER_ACT = 2.0
+
+
+@dataclass(frozen=True)
+class QueryPhases:
+    """Per-phase seconds and utilization for one query."""
+    t_prefill: float
+    t_decode: float
+    t_overhead: float
+    util_prefill: float
+    util_decode: float
+
+    @property
+    def total(self) -> float:
+        return self.t_prefill + self.t_decode + self.t_overhead
+
+
+# --------------------------------------------------------------------- FLOPs/bytes
+def flops_prefill(cfg: ModelConfig, m: int) -> float:
+    """Forward FLOPs to process m prompt tokens."""
+    n_act = cfg.active_param_count()
+    f = 2.0 * n_act * m
+    # causal attention: 2 matmuls (QK^T, PV) x 2 FLOPs, halved by causal mask
+    if not cfg.is_attention_free:
+        d_attn = cfg.num_heads * cfg.resolved_head_dim
+        layers = cfg.num_layers if cfg.family != "audio" else cfg.num_layers + cfg.encoder_layers
+        eff_ctx = min(m, cfg.sliding_window) if cfg.sliding_window else m
+        f += 2.0 * layers * m * eff_ctx * d_attn
+    if cfg.family in ("ssm", "hybrid"):
+        s = cfg.ssm
+        # SSD state algebra: ~ 6 * d_inner * N per token per layer
+        f += 6.0 * cfg.num_layers * m * cfg.d_inner * s.state_dim
+    return f
+
+
+def flops_decode_token(cfg: ModelConfig, ctx: int) -> float:
+    """FLOPs to emit one token at context length ctx."""
+    n_act = cfg.active_param_count()
+    f = 2.0 * n_act
+    if not cfg.is_attention_free:
+        d_attn = cfg.num_heads * cfg.resolved_head_dim
+        eff_ctx = min(ctx, cfg.sliding_window) if cfg.sliding_window else ctx
+        n_attn_layers = cfg.num_layers
+        if cfg.family == "hybrid":
+            n_attn_layers = max(1, cfg.num_layers // max(1, cfg.hybrid_attn_every))
+        f += 4.0 * n_attn_layers * eff_ctx * d_attn
+    if cfg.family in ("ssm", "hybrid"):
+        f += 6.0 * cfg.num_layers * cfg.d_inner * cfg.ssm.state_dim
+    return f
+
+
+def kv_bytes_per_token_ctx(cfg: ModelConfig, ctx: int) -> float:
+    """KV-cache bytes read to emit one token at context ctx."""
+    if cfg.is_attention_free:
+        s = cfg.ssm
+        return cfg.num_layers * cfg.ssm_heads * s.head_dim * s.state_dim * 4.0
+    hd = cfg.resolved_head_dim
+    eff_ctx = min(ctx, cfg.sliding_window) if cfg.sliding_window else ctx
+    n_attn_layers = cfg.num_layers
+    if cfg.family == "hybrid":
+        n_attn_layers = max(1, cfg.num_layers // max(1, cfg.hybrid_attn_every))
+        ssm_bytes = cfg.num_layers * cfg.ssm_heads * cfg.ssm.head_dim * cfg.ssm.state_dim * 4.0
+        return 2.0 * n_attn_layers * cfg.num_kv_heads * hd * eff_ctx * BYTES_PER_ACT + ssm_bytes
+    return 2.0 * n_attn_layers * cfg.num_kv_heads * hd * eff_ctx * BYTES_PER_ACT
+
+
+def weight_bytes(cfg: ModelConfig) -> float:
+    return cfg.param_count() * BYTES_PER_PARAM
+
+
+# --------------------------------------------------------------------- time model
+def query_phases(cfg: ModelConfig, m: int, n: int, s: SystemProfile,
+                 batch: int = 1) -> QueryPhases:
+    """Roofline time for one query of m input / n output tokens on system s,
+    amortizing weight streaming over `batch` concurrent queries."""
+    peak = s.instance_peak_flops * s.compute_eff
+    bw = s.instance_hbm_bw * s.mem_eff
+    wb = weight_bytes(cfg)
+
+    # ---- prefill ----
+    f_pf = flops_prefill(cfg, m)
+    b_pf = wb / batch + 2.0 * m * cfg.d_model * BYTES_PER_ACT * cfg.num_layers
+    t_pf_compute = f_pf / peak
+    t_pf_mem = b_pf / bw
+    t_pf = max(t_pf_compute, t_pf_mem) * s.degradation(m)
+    util_pf = min(1.0, t_pf_compute / max(t_pf, 1e-12))
+
+    # ---- decode: integrate per-token time at mid-context (trapezoid approx) ----
+    t_dec = 0.0
+    util_dec = 0.0
+    if n > 0:
+        ctx_mid = m + n / 2.0
+        f_tok = flops_decode_token(cfg, int(ctx_mid))
+        b_tok = wb / batch + kv_bytes_per_token_ctx(cfg, int(ctx_mid))
+        t_tok_compute = f_tok / peak
+        t_tok_mem = b_tok / bw
+        t_tok = max(t_tok_compute, t_tok_mem) * s.degradation(ctx_mid)
+        t_dec = n * t_tok
+        util_dec = min(1.0, t_tok_compute / max(t_tok, 1e-12))
+
+    return QueryPhases(t_prefill=t_pf, t_decode=t_dec, t_overhead=s.overhead_s,
+                       util_prefill=util_pf, util_decode=util_dec)
+
+
+def runtime(cfg: ModelConfig, m: int, n: int, s: SystemProfile,
+            batch: int = 1) -> float:
+    """R(m, n, s) in seconds (Eq. 1's runtime term)."""
+    return query_phases(cfg, m, n, s, batch).total
+
+
+def throughput(cfg: ModelConfig, m: int, n: int, s: SystemProfile,
+               batch: int = 1) -> float:
+    """tokens/s processed+generated for one query."""
+    return (m + n) / runtime(cfg, m, n, s, batch)

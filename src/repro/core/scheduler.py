@@ -1,0 +1,152 @@
+"""Schedulers implementing the paper's Eq. 2 partition problem.
+
+  * ThresholdScheduler — the paper's Section 6 heuristic: route by T_in/T_out.
+  * CostOptimalScheduler — exact per-query argmin_s U(m,n,s); because Eq. 2's
+    objective is separable per query (no capacity coupling), this IS the
+    optimal partition for fixed lambda.
+  * CapacityAwareScheduler — beyond-paper: accounts for instance counts and
+    queueing: the cost of a pool includes the wait until an instance frees up,
+    so bursts spill to the other pool instead of queueing indefinitely.
+  * Baselines — workload-unaware policies the paper compares against.
+"""
+from __future__ import annotations
+
+import heapq
+from dataclasses import dataclass, field
+from typing import Dict, List, Optional, Sequence
+
+from repro.configs.base import ModelConfig
+from repro.core.cost import CostParams, cost
+from repro.core.energy import energy
+from repro.core.perf_model import runtime
+from repro.core.systems import SystemProfile
+from repro.core.workload import Query
+
+
+@dataclass
+class Assignment:
+    query: Query
+    system: SystemProfile
+    energy_j: float
+    runtime_s: float
+    wait_s: float = 0.0
+
+
+class Scheduler:
+    """Assigns each query to a system. Subclasses override ``choose``."""
+
+    def __init__(self, cfg: ModelConfig, systems: Sequence[SystemProfile],
+                 cp: CostParams = CostParams()):
+        self.cfg = cfg
+        self.systems = list(systems)
+        self.cp = cp
+
+    def choose(self, q: Query) -> SystemProfile:
+        raise NotImplementedError
+
+    def assign(self, queries: Sequence[Query]) -> List[Assignment]:
+        out = []
+        for q in queries:
+            s = self.choose(q)
+            out.append(Assignment(q, s, energy(self.cfg, q.m, q.n, s),
+                                  runtime(self.cfg, q.m, q.n, s)))
+        return out
+
+
+class ThresholdScheduler(Scheduler):
+    """Paper Section 6: efficiency pool iff m <= T_in (axis='in'),
+    n <= T_out (axis='out'), or both (axis='both')."""
+
+    def __init__(self, cfg, eff: SystemProfile, perf: SystemProfile, *,
+                 t_in: int = 32, t_out: int = 32, axis: str = "in",
+                 cp: CostParams = CostParams()):
+        super().__init__(cfg, [eff, perf], cp)
+        self.eff, self.perf = eff, perf
+        self.t_in, self.t_out, self.axis = t_in, t_out, axis
+
+    def choose(self, q: Query) -> SystemProfile:
+        if self.axis == "in":
+            small = q.m <= self.t_in
+        elif self.axis == "out":
+            small = q.n <= self.t_out
+        else:
+            small = q.m <= self.t_in and q.n <= self.t_out
+        return self.eff if small else self.perf
+
+
+class CostOptimalScheduler(Scheduler):
+    """Per-query argmin_s U(m, n, s) — exact for the uncapacitated Eq. 2."""
+
+    def choose(self, q: Query) -> SystemProfile:
+        return min(self.systems,
+                   key=lambda s: cost(self.cfg, q.m, q.n, s, self.cp))
+
+
+@dataclass
+class _Pool:
+    system: SystemProfile
+    free_at: List[float] = field(default_factory=list)   # heap of instance-free times
+
+
+class CapacityAwareScheduler(Scheduler):
+    """Beyond-paper: cost includes queueing delay given finite instance counts.
+
+    Greedy event-driven assignment in arrival order: each pool keeps a heap of
+    instance-free times; candidate cost = lam*E + (1-lam)*(wait + R).
+    """
+
+    def __init__(self, cfg, systems: Sequence[SystemProfile],
+                 counts: Dict[str, int], cp: CostParams = CostParams()):
+        super().__init__(cfg, systems, cp)
+        self.pools = {s.name: _Pool(s, [0.0] * counts.get(s.name, 1))
+                      for s in systems}
+        for p in self.pools.values():
+            heapq.heapify(p.free_at)
+
+    def _assign_one(self, q: Query) -> Assignment:
+        best, best_c, best_wait, best_r, best_e = None, float("inf"), 0.0, 0.0, 0.0
+        for p in self.pools.values():
+            r = runtime(self.cfg, q.m, q.n, p.system)
+            e = energy(self.cfg, q.m, q.n, p.system)
+            wait = max(0.0, p.free_at[0] - q.arrival_s)
+            c = (self.cp.lam * e / self.cp.e_norm
+                 + (1 - self.cp.lam) * (wait + r) / self.cp.r_norm)
+            if c < best_c:
+                best, best_c, best_wait, best_r, best_e = p, c, wait, r, e
+        start = max(q.arrival_s, best.free_at[0])
+        heapq.heapreplace(best.free_at, start + best_r)
+        return Assignment(q, best.system, best_e, best_r, best_wait)
+
+    def choose(self, q: Query) -> SystemProfile:
+        """Online single-query dispatch (stateful: reserves the instance)."""
+        return self._assign_one(q).system
+
+    def assign(self, queries: Sequence[Query]) -> List[Assignment]:
+        return [self._assign_one(q)
+                for q in sorted(queries, key=lambda q: q.arrival_s)]
+
+
+# ------------------------------------------------------------------ baselines
+class SingleSystemScheduler(Scheduler):
+    """Workload-unaware: everything on one system (paper's dashed lines)."""
+
+    def __init__(self, cfg, system: SystemProfile, cp: CostParams = CostParams()):
+        super().__init__(cfg, [system], cp)
+        self.system = system
+
+    def choose(self, q: Query) -> SystemProfile:
+        return self.system
+
+
+class RoundRobinScheduler(Scheduler):
+    """Workload-unaware hybrid baseline: alternate pools ignoring (m, n)."""
+
+    def __init__(self, cfg, systems: Sequence[SystemProfile],
+                 cp: CostParams = CostParams()):
+        super().__init__(cfg, systems, cp)
+        self._i = 0
+
+    def choose(self, q: Query) -> SystemProfile:
+        s = self.systems[self._i % len(self.systems)]
+        self._i += 1
+        return s

@@ -1,0 +1,128 @@
+"""System profiles for the hybrid heterogeneous fleet.
+
+A ``SystemProfile`` is one *serving instance*: a set of chips that together
+host one model replica. Profiles carry the hardware constants the analytic
+perf/energy model needs. The paper's systems (M1-Pro, A100 node, V100 node)
+are included so its experiments can be replayed; the TPU classes are the
+deployment target of this framework.
+
+Power constants: vendor TDP where published, otherwise documented estimates
+(marked ~). The paper's central phenomenon — an efficiency-class device with
+lower J/token below a workload threshold — depends on the *ratio* of idle
+power to peak and on per-query software overhead, not on exact wattages.
+"""
+from __future__ import annotations
+
+from dataclasses import dataclass, replace
+from typing import Dict, Tuple
+
+
+@dataclass(frozen=True)
+class SystemProfile:
+    name: str
+    kind: str                 # "eff" | "perf"
+    chips: int                # chips per serving instance
+    peak_flops: float         # FLOP/s per chip (bf16/fp16 dense)
+    hbm_bw: float             # bytes/s per chip
+    ici_bw: float             # bytes/s per inter-chip link
+    power_peak: float         # W per chip, full utilization
+    power_idle: float         # W per chip, idle but allocated
+    overhead_s: float         # per-query software overhead (tokenize/schedule/launch)
+    mem_eff: float = 0.8      # achievable fraction of peak HBM bandwidth
+    compute_eff: float = 0.5  # achievable fraction of peak FLOPs at B=1 inference
+    # Workload-saturation constant (tokens). Efficiency-class devices degrade
+    # superlinearly as the working set grows (cache thrash, unified-memory
+    # contention, thermal limits): effective service time is multiplied by
+    # (1 + ctx/sat_ctx). None = no degradation (datacenter parts). This models
+    # the paper's Fig 1a/2a observation that the M1-Pro's runtime escalates
+    # "with the most significant magnitude" and it cannot generate >512 tokens
+    # without "significant runtime penalties".
+    sat_ctx: float = None     # type: ignore[assignment]
+    max_out_tokens: int = 0   # advisory output cap (0 = unlimited)
+
+    def degradation(self, ctx: float) -> float:
+        if self.sat_ctx is None:
+            return 1.0
+        return 1.0 + ctx / self.sat_ctx
+
+    @property
+    def instance_peak_flops(self) -> float:
+        return self.chips * self.peak_flops
+
+    @property
+    def instance_hbm_bw(self) -> float:
+        return self.chips * self.hbm_bw
+
+    def power(self, util: float) -> float:
+        """Instance power draw (W) at compute utilization in [0, 1]."""
+        util = min(max(util, 0.0), 1.0)
+        return self.chips * (self.power_idle + (self.power_peak - self.power_idle) * util)
+
+
+# --------------------------------------------------------------------------- TPU
+# v5e: 197 TFLOP/s bf16, 819 GB/s HBM, ~50 GB/s/link ICI (the repo's roofline target)
+TPU_V5E_PERF = SystemProfile(
+    name="tpu-v5e-perf", kind="perf", chips=4,
+    peak_flops=197e12, hbm_bw=819e9, ici_bw=50e9,
+    power_peak=170.0,         # ~ per-chip board power under load
+    power_idle=55.0,          # ~ allocated-idle
+    overhead_s=0.04,
+)
+
+# efficiency class: down-clocked v5e-lite-like single chip. Half clock ->
+# slightly better than half peak power (voltage scaling), much lower idle.
+TPU_V5LITE_EFF = SystemProfile(
+    name="tpu-v5lite-eff", kind="eff", chips=1,
+    peak_flops=98.5e12, hbm_bw=819e9, ici_bw=50e9,
+    power_peak=70.0, power_idle=8.0,
+    overhead_s=0.08,          # weaker host, slower launch path
+    sat_ctx=2048.0,           # single chip: VMEM/HBM pressure at long context
+    max_out_tokens=4096,
+)
+
+# --------------------------------------------------------------------------- paper replay
+M1_PRO = SystemProfile(
+    name="m1-pro", kind="eff", chips=1,
+    peak_flops=5.2e12,        # 14-core M1 Pro GPU fp16
+    hbm_bw=200e9,             # unified memory bandwidth
+    ici_bw=0.0,
+    power_peak=30.0, power_idle=2.0,
+    overhead_s=0.35,          # macOS + python serving stack (paper Fig 1a intercept)
+    compute_eff=0.4,
+    sat_ctx=10.0,             # calibrated: reproduces the paper's T*=32 optimum
+                              # on BOTH axes under the Eq. 9/10 methodology
+    max_out_tokens=512,       # paper: M1 "could only generate up to 512 tokens"
+)
+
+A100_NODE = SystemProfile(
+    name="swing-a100", kind="perf", chips=8,   # 8x A100-40GB (paper's Swing node)
+    peak_flops=312e12, hbm_bw=1555e9, ici_bw=300e9,
+    power_peak=400.0, power_idle=55.0,
+    overhead_s=0.06,
+)
+
+V100_NODE = SystemProfile(
+    name="palmetto-v100", kind="perf", chips=2,  # 2x V100-16GB
+    peak_flops=125e12, hbm_bw=900e9, ici_bw=150e9,
+    power_peak=300.0, power_idle=45.0,
+    overhead_s=0.10,
+)
+
+PROFILES: Dict[str, SystemProfile] = {
+    p.name: p for p in
+    (TPU_V5E_PERF, TPU_V5LITE_EFF, M1_PRO, A100_NODE, V100_NODE)
+}
+
+
+def get_profile(name: str) -> SystemProfile:
+    return PROFILES[name]
+
+
+def paper_fleet() -> Tuple[SystemProfile, SystemProfile]:
+    """(efficiency, performance) pair the paper's Section 6 analyses."""
+    return M1_PRO, A100_NODE
+
+
+def tpu_fleet() -> Tuple[SystemProfile, SystemProfile]:
+    """TPU-native hybrid fleet (our deployment adaptation)."""
+    return TPU_V5LITE_EFF, TPU_V5E_PERF

@@ -1,0 +1,135 @@
+"""Flash-decode Pallas-TPU kernel: one new query token vs a long KV cache.
+
+TPU-native adaptation of flash-decode (no warp-level reductions):
+  * Grouped-query packing: the G = Hq/Hkv query heads sharing one KV head form
+    the *rows* of the query block, so the MXU sees a (G, D) x (D, bk) matmul
+    instead of a degenerate (1, D) one. This is the standard TPU trick for
+    making single-token decode MXU-friendly.
+  * Split-KV: the cache is scanned in block_k chunks along the innermost
+    (sequential) grid dimension; online-softmax partials (m, l, acc) persist in
+    VMEM scratch exactly as in the prefill kernel, and blocks entirely beyond
+    kv_len (or left of the sliding window) are skipped structurally.
+  * kv_len is a scalar-prefetch operand (SMEM) so per-batch lengths steer the
+    block skip without touching the vector units.
+"""
+from __future__ import annotations
+
+import functools
+from typing import Optional
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+from jax.experimental.pallas import tpu as pltpu
+
+NEG_INF = -1e30
+
+
+def _decode_kernel(kv_len_ref, q_ref, k_ref, v_ref, o_ref, acc_ref, m_ref, l_ref, *,
+                   sm_scale: float, window: Optional[int],
+                   softcap: Optional[float], block_k: int, num_k_blocks: int):
+    b = pl.program_id(0)
+    ik = pl.program_id(2)
+    kv_len = kv_len_ref[b]
+
+    @pl.when(ik == 0)
+    def _init():
+        acc_ref[...] = jnp.zeros_like(acc_ref)
+        m_ref[...] = jnp.full_like(m_ref, NEG_INF)
+        l_ref[...] = jnp.zeros_like(l_ref)
+
+    k_first = ik * block_k
+    live = k_first < kv_len
+    if window is not None:
+        k_last = k_first + block_k - 1
+        live &= k_last >= (kv_len - window)
+
+    @pl.when(live)
+    def _compute():
+        q = q_ref[0, 0].astype(jnp.float32) * sm_scale          # (G, D)
+        k = k_ref[0, 0].astype(jnp.float32)                     # (bk, D)
+        v = v_ref[0, 0].astype(jnp.float32)
+        s = jax.lax.dot_general(q, k, (((1,), (1,)), ((), ())),
+                                preferred_element_type=jnp.float32)  # (G, bk)
+        if softcap is not None:
+            s = softcap * jnp.tanh(s / softcap)
+        G = s.shape[0]
+        kpos = ik * block_k + jax.lax.broadcasted_iota(jnp.int32, (G, block_k), 1)
+        mask = kpos < kv_len
+        if window is not None:
+            mask &= kpos >= (kv_len - window)
+        s = jnp.where(mask, s, NEG_INF)
+
+        m_prev, l_prev = m_ref[...], l_ref[...]
+        m_new = jnp.maximum(m_prev, jnp.max(s, axis=1, keepdims=True))
+        alpha = jnp.exp(m_prev - m_new)
+        p = jnp.where(mask, jnp.exp(s - m_new), 0.0)
+        l_ref[...] = l_prev * alpha + jnp.sum(p, axis=1, keepdims=True)
+        acc_ref[...] = acc_ref[...] * alpha + jax.lax.dot_general(
+            p, v, (((1,), (0,)), ((), ())), preferred_element_type=jnp.float32)
+        m_ref[...] = m_new
+
+    @pl.when(ik == num_k_blocks - 1)
+    def _finalize():
+        l = l_ref[...]
+        l = jnp.where(l == 0.0, 1.0, l)
+        o_ref[0, 0] = (acc_ref[...] / l).astype(o_ref.dtype)
+
+
+@functools.partial(
+    jax.jit,
+    static_argnames=("window", "softcap", "block_k", "interpret"),
+)
+def decode_attention(q: jnp.ndarray, k_cache: jnp.ndarray, v_cache: jnp.ndarray,
+                     kv_len: jnp.ndarray, *, window: Optional[int] = None,
+                     softcap: Optional[float] = None, block_k: int = 128,
+                     interpret: bool = True) -> jnp.ndarray:
+    """q: (B, Hq, 1, D); caches (B, Hkv, Smax, D); kv_len (B,) int32.
+
+    Returns (B, Hq, 1, D). The new token's K/V must already be written into the
+    cache at position kv_len-1.
+    """
+    B, Hq, one, D = q.shape
+    assert one == 1
+    _, Hkv, Smax, _ = k_cache.shape
+    assert Hq % Hkv == 0
+    G = Hq // Hkv
+    sm_scale = D ** -0.5
+
+    pad_k = (-Smax) % block_k
+    if pad_k:
+        k_cache = jnp.pad(k_cache, ((0, 0), (0, 0), (0, pad_k), (0, 0)))
+        v_cache = jnp.pad(v_cache, ((0, 0), (0, 0), (0, pad_k), (0, 0)))
+    Skp = Smax + pad_k
+    nk = Skp // block_k
+
+    # grouped-query packing: (B, Hkv, G, D)
+    qg = q.reshape(B, Hkv, G, D)
+    kv_len = kv_len.astype(jnp.int32)
+
+    kernel = functools.partial(
+        _decode_kernel, sm_scale=sm_scale, window=window, softcap=softcap,
+        block_k=block_k, num_k_blocks=nk)
+
+    grid_spec = pltpu.PrefetchScalarGridSpec(
+        num_scalar_prefetch=1,
+        grid=(B, Hkv, nk),
+        in_specs=[
+            pl.BlockSpec((1, 1, G, D), lambda b, h, ik, *_: (b, h, 0, 0)),
+            pl.BlockSpec((1, 1, block_k, D), lambda b, h, ik, *_: (b, h, ik, 0)),
+            pl.BlockSpec((1, 1, block_k, D), lambda b, h, ik, *_: (b, h, ik, 0)),
+        ],
+        out_specs=pl.BlockSpec((1, 1, G, D), lambda b, h, ik, *_: (b, h, 0, 0)),
+        scratch_shapes=[
+            pltpu.VMEM((G, D), jnp.float32),
+            pltpu.VMEM((G, 1), jnp.float32),
+            pltpu.VMEM((G, 1), jnp.float32),
+        ],
+    )
+    out = pl.pallas_call(
+        kernel,
+        grid_spec=grid_spec,
+        out_shape=jax.ShapeDtypeStruct((B, Hkv, G, D), q.dtype),
+        interpret=interpret,
+    )(kv_len, qg, k_cache, v_cache)
+    return out.reshape(B, Hq, 1, D)

@@ -1,0 +1,72 @@
+"""Public jit'd kernel wrappers with backend dispatch.
+
+Backends:
+  * "pallas"           — compiled Pallas (TPU target)
+  * "pallas_interpret" — Pallas interpret mode (CPU correctness validation)
+  * "ref"              — pure-jnp oracle (also what the CPU dry-run compiles;
+                         identical FLOP structure to the fused kernel)
+  * "auto" (default)   — pallas on TPU, ref elsewhere.
+
+Models call these entry points only; they never touch pallas_call directly.
+"""
+from __future__ import annotations
+
+import os
+from typing import Optional
+
+import jax
+import jax.numpy as jnp
+
+from repro.kernels import ref as _ref
+from repro.kernels import flash_attention as _fa
+from repro.kernels import decode_attention as _da
+from repro.kernels import ssm_scan as _ss
+
+_FORCED = os.environ.get("REPRO_KERNEL_BACKEND")  # override for experiments
+
+
+def resolve_backend(backend: str = "auto") -> str:
+    if _FORCED:
+        backend = _FORCED
+    if backend == "auto":
+        return "pallas" if jax.default_backend() == "tpu" else "ref"
+    return backend
+
+
+def flash_attention(q, k, v, *, causal: bool = True, window: Optional[int] = None,
+                    softcap: Optional[float] = None, q_offset: int = 0,
+                    backend: str = "auto") -> jnp.ndarray:
+    b = resolve_backend(backend)
+    if b == "ref":
+        return _ref.mha_attention_chunked(q, k, v, causal=causal, window=window,
+                                          softcap=softcap, q_offset=q_offset)
+    return _fa.flash_attention(q, k, v, causal=causal, window=window,
+                               softcap=softcap, q_offset=q_offset,
+                               interpret=(b == "pallas_interpret"))
+
+
+def decode_attention(q, k_cache, v_cache, kv_len, *, window: Optional[int] = None,
+                     softcap: Optional[float] = None,
+                     backend: str = "auto") -> jnp.ndarray:
+    b = resolve_backend(backend)
+    if b == "ref":
+        return _ref.decode_attention(q, k_cache, v_cache, kv_len=kv_len,
+                                     window=window, softcap=softcap)
+    return _da.decode_attention(q, k_cache, v_cache, kv_len, window=window,
+                                softcap=softcap,
+                                interpret=(b == "pallas_interpret"))
+
+
+def ssd_scan(x, dt, A, Bmat, Cmat, *, chunk: int = 128, backend: str = "auto"):
+    b = resolve_backend(backend)
+    if b == "ref":
+        # chunked matmul form: same algebra as the kernel, MXU-shaped FLOPs
+        return _ref.ssd_scan_chunked(x, dt, A, Bmat, Cmat, chunk=chunk)
+    return _ss.ssd_scan(x, dt, A, Bmat, Cmat, chunk=chunk,
+                        interpret=(b == "pallas_interpret"))
+
+
+def ssd_decode_step(state, x, dt, A, Bvec, Cvec):
+    # single-token state update: pure jnp everywhere (elementwise + tiny matmuls,
+    # no kernel win at (B,H,P,N) scale)
+    return _ref.ssd_decode_step(state, x, dt, A, Bvec, Cvec)

@@ -1,0 +1,295 @@
+import os
+os.environ["XLA_FLAGS"] = "--xla_force_host_platform_device_count=512"
+
+# --- everything below may import jax ---------------------------------------
+import argparse
+import dataclasses
+import functools
+import json
+import re
+import time
+from contextlib import contextmanager
+from typing import Any, Dict, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+
+from repro.configs import (INPUT_SHAPES, get_config, get_shape, list_archs,
+                           supports_shape)
+from repro.configs.base import InputShape, ModelConfig
+from repro.launch import input_specs as ISPEC
+from repro.launch.mesh import make_production_mesh
+from repro.models import model as M
+from repro.sharding import specs as SH
+from repro.training import optimizer as OPT
+from repro.training import train as TR
+
+RESULTS_DIR = os.path.join(os.path.dirname(__file__), "..", "..", "..",
+                           "experiments", "dryrun")
+
+COLLECTIVE_OPS = ("all-reduce", "all-gather", "reduce-scatter", "all-to-all",
+                  "collective-permute")
+_DTYPE_BYTES = {"pred": 1, "s8": 1, "u8": 1, "s16": 2, "u16": 2, "bf16": 2,
+                "f16": 2, "s32": 4, "u32": 4, "f32": 4, "s64": 8, "u64": 8,
+                "f64": 8, "c64": 8, "c128": 16}
+_SHAPE_RE = re.compile(r"(\w+)\[([\d,]*)\]")
+_COLL_RE = re.compile(
+    r"=\s*((?:\([^)]*\))|(?:\w+\[[^\]]*\]\S*))\s+"
+    r"(all-reduce|all-gather|reduce-scatter|all-to-all|collective-permute)"
+    r"(?:-start|-done)?\(")
+
+
+def parse_collective_bytes(hlo_text: str) -> Dict[str, float]:
+    """Sum result-shape bytes of every collective op in (per-device) HLO."""
+    out = {op: 0.0 for op in COLLECTIVE_OPS}
+    counts = {op: 0 for op in COLLECTIVE_OPS}
+    for m in _COLL_RE.finditer(hlo_text):
+        shapes, op = m.group(1), m.group(2)
+        if op.endswith("-done"):
+            continue
+        nbytes = 0.0
+        for sm in _SHAPE_RE.finditer(shapes):
+            dt, dims = sm.group(1), sm.group(2)
+            if dt not in _DTYPE_BYTES:
+                continue
+            n = 1
+            for d in dims.split(","):
+                if d:
+                    n *= int(d)
+            nbytes += n * _DTYPE_BYTES[dt]
+        out[op] += nbytes
+        counts[op] += 1
+    out["counts"] = counts  # type: ignore[assignment]
+    return out
+
+
+@contextmanager
+def unrolled():
+    old = os.environ.get("REPRO_SCAN_UNROLL")
+    os.environ["REPRO_SCAN_UNROLL"] = "1"
+    try:
+        yield
+    finally:
+        if old is None:
+            os.environ.pop("REPRO_SCAN_UNROLL", None)
+        else:
+            os.environ["REPRO_SCAN_UNROLL"] = old
+
+
+# --------------------------------------------------------------------- steps
+def make_step(cfg: ModelConfig, shape: InputShape):
+    if shape.kind == "train":
+        opt = OPT.AdamWConfig()
+        ts = TR.make_train_step(cfg, opt, backend="ref", remat=True)
+        return ts
+    if shape.kind == "prefill":
+        def prefill_step(params, batch, cache):
+            return M.prefill(params, cfg, batch, cache, backend="ref")
+        return prefill_step
+
+    def serve_step(params, tokens, cache):
+        return M.decode_step(params, cfg, tokens, cache, backend="ref")
+    return serve_step
+
+
+def shardings_for(mesh, cfg: ModelConfig, shape: InputShape, abstract_args):
+    seq_shard = (shape.kind == "decode"
+                 and shape.global_batch % mesh.shape["data"] != 0)
+    p_sh = SH.params_shardings(mesh, abstract_args[0])
+    if shape.kind == "train":
+        o_sh = jax.tree.map(
+            lambda _: None, abstract_args[1],
+            is_leaf=lambda x: isinstance(x, jax.ShapeDtypeStruct))
+        # optimizer state: mu/nu shard like params (+ ZeRO-1 under REPRO_ZERO=1)
+        o_sh = {"mu": SH.opt_state_shardings(mesh, abstract_args[1]["mu"]),
+                "nu": SH.opt_state_shardings(mesh, abstract_args[1]["nu"]),
+                "step": jax.NamedSharding(mesh, jax.sharding.PartitionSpec())}
+        b_sh = SH.batch_shardings(mesh, abstract_args[2])
+        in_sh = (p_sh, o_sh, b_sh)
+        out_sh = (p_sh, o_sh, None)
+    elif shape.kind == "prefill":
+        b_sh = SH.batch_shardings(mesh, abstract_args[1])
+        c_sh = SH.cache_shardings(mesh, abstract_args[2], seq_shard=False)
+        in_sh = (p_sh, b_sh, c_sh)
+        out_sh = (None, c_sh)
+    else:
+        t_sh = SH.batch_shardings(mesh, abstract_args[1])
+        c_sh = SH.cache_shardings(mesh, abstract_args[2], seq_shard=seq_shard)
+        in_sh = (p_sh, t_sh, c_sh)
+        out_sh = (None, c_sh)
+    return in_sh, out_sh
+
+
+# --------------------------------------------------------------------- compile
+def lower_and_compile(cfg: ModelConfig, shape: InputShape, mesh,
+                      donate: bool = True):
+    cfg = ISPEC.adapt_config(cfg, shape)
+    args = ISPEC.input_specs(cfg, shape)
+    step = make_step(cfg, shape)
+    in_sh, out_sh = shardings_for(mesh, cfg, shape, args)
+    # donation: train aliases params+opt_state in->out; prefill/decode alias
+    # the cache — this is what makes the per-device temp footprint realistic
+    donate = (0, 1) if shape.kind == "train" else (2,)
+    jitted = jax.jit(step, in_shardings=in_sh, out_shardings=out_sh,
+                     donate_argnums=donate)
+    with mesh:
+        t0 = time.time()
+        lowered = jitted.lower(*args)
+        t1 = time.time()
+        compiled = lowered.compile()
+        t2 = time.time()
+    return compiled, {"lower_s": t1 - t0, "compile_s": t2 - t1}
+
+
+def analyze(compiled) -> Dict[str, Any]:
+    out: Dict[str, Any] = {}
+    ca = compiled.cost_analysis() or {}
+    out["hlo_flops_raw"] = float(ca.get("flops", 0.0))
+    out["hlo_bytes_raw"] = float(ca.get("bytes accessed", 0.0))
+    ma = compiled.memory_analysis()
+    if ma is not None:
+        for f in ("argument_size_in_bytes", "output_size_in_bytes",
+                  "temp_size_in_bytes", "generated_code_size_in_bytes",
+                  "alias_size_in_bytes"):
+            v = getattr(ma, f, None)
+            if v is not None:
+                out[f] = int(v)
+    hlo = compiled.as_text()
+    out["collectives"] = parse_collective_bytes(hlo)
+    return out
+
+
+# --------------------------------------------- component (unrolled) accounting
+def _component_cfgs(cfg: ModelConfig) -> Dict[str, ModelConfig]:
+    """Tiny-depth variants whose UNROLLED compiles let us solve exact per-layer
+    HLO costs (XLA counts while bodies once, so the scanned compile can't)."""
+    r = dataclasses.replace
+    if cfg.family == "hybrid":
+        return {"m1": r(cfg, num_layers=1, hybrid_attn_every=0),
+                "m2": r(cfg, num_layers=2, hybrid_attn_every=0),
+                "m3": r(cfg, num_layers=3, hybrid_attn_every=0),
+                "a1": r(cfg, num_layers=1, hybrid_attn_every=1)}
+    if cfg.family == "audio":
+        return {"e1d1": r(cfg, encoder_layers=1, num_layers=1),
+                "e2d1": r(cfg, encoder_layers=2, num_layers=1),
+                "e3d1": r(cfg, encoder_layers=3, num_layers=1),
+                "e1d2": r(cfg, encoder_layers=1, num_layers=2),
+                "e1d3": r(cfg, encoder_layers=1, num_layers=3)}
+    return {"l1": r(cfg, num_layers=1), "l2": r(cfg, num_layers=2),
+            "l3": r(cfg, num_layers=3)}
+
+
+def _combine(cfg: ModelConfig, shape: InputShape,
+             comp: Dict[str, Dict[str, float]]) -> Dict[str, float]:
+    """Extrapolate totals from component measurements."""
+    L = cfg.num_layers
+
+    def slope(a, b, c):
+        """Robust per-layer increment from three depth points: GSPMD can make
+        non-additive resharding choices per graph, so take the median of the
+        three consistent difference estimators and clamp at 0."""
+        cands = sorted([b - a, c - b, (c - a) / 2.0])
+        return max(0.0, cands[1])
+
+    def merge(fn):
+        if cfg.family == "hybrid":
+            n_attn = sum(1 for *_, a in M._hybrid_segments(cfg) if a)
+            body = slope(fn("m1"), fn("m2"), fn("m3"))
+            attn = max(0.0, fn("a1") - fn("m1"))
+            return max(fn("m1") - body, 0.0) + L * body + n_attn * attn
+        if cfg.family == "audio":
+            enc_body = slope(fn("e1d1"), fn("e2d1"), fn("e3d1"))
+            dec_body = slope(fn("e1d1"), fn("e1d2"), fn("e1d3"))
+            E = cfg.encoder_layers
+            base = max(fn("e1d1") - enc_body - dec_body, 0.0)
+            # decode shapes never run the encoder (enc cost sits in prefill)
+            if shape.kind == "decode":
+                return max(fn("e1d1") - dec_body, 0.0) + L * dec_body
+            return base + E * enc_body + L * dec_body
+        body = slope(fn("l1"), fn("l2"), fn("l3"))
+        return max(fn("l1") - body, 0.0) + L * body
+
+    out = {"hlo_flops": merge(lambda k: comp[k]["hlo_flops_raw"]),
+           "hlo_bytes": merge(lambda k: comp[k]["hlo_bytes_raw"])}
+    for op in COLLECTIVE_OPS:
+        out[f"coll_{op}"] = max(0.0, merge(lambda k: comp[k]["collectives"][op]))
+    out["collective_bytes"] = sum(out[f"coll_{op}"] for op in COLLECTIVE_OPS)
+    return out
+
+
+def component_analysis(cfg: ModelConfig, shape: InputShape, mesh) -> Dict[str, float]:
+    comps = {}
+    with unrolled():
+        for name, ccfg in _component_cfgs(cfg).items():
+            compiled, _ = lower_and_compile(ccfg, shape, mesh)
+            comps[name] = analyze(compiled)
+    return _combine(cfg, shape, comps)
+
+
+# --------------------------------------------------------------------- driver
+def run_one(arch: str, shape_name: str, *, multi_pod: bool = False,
+            components: bool = True, out_dir: str = RESULTS_DIR,
+            force: bool = False) -> Optional[Dict[str, Any]]:
+    cfg = get_config(arch)
+    shape = get_shape(shape_name)
+    ok, reason = supports_shape(cfg, shape)
+    mesh_tag = "2x16x16" if multi_pod else "16x16"
+    os.makedirs(out_dir, exist_ok=True)
+    path = os.path.join(out_dir, f"{arch}__{shape_name}__{mesh_tag}.json")
+    if os.path.exists(path) and not force:
+        with open(path) as f:
+            return json.load(f)
+    if not ok:
+        rec = {"arch": arch, "shape": shape_name, "mesh": mesh_tag,
+               "status": "SKIP", "reason": reason}
+        with open(path, "w") as f:
+            json.dump(rec, f, indent=2)
+        print(f"[dryrun] SKIP {arch} x {shape_name}: {reason}")
+        return rec
+
+    mesh = make_production_mesh(multi_pod=multi_pod)
+    rec: Dict[str, Any] = {"arch": arch, "shape": shape_name, "mesh": mesh_tag,
+                           "status": "OK"}
+    try:
+        compiled, times = lower_and_compile(cfg, shape, mesh)
+        rec.update(times)
+        rec["full"] = analyze(compiled)
+        del compiled
+        if components and not multi_pod:
+            rec["extrapolated"] = component_analysis(cfg, shape, mesh)
+    except Exception as e:  # noqa: BLE001 — failures are the experiment result
+        rec["status"] = "FAIL"
+        rec["error"] = f"{type(e).__name__}: {e}"[:2000]
+    with open(path, "w") as f:
+        json.dump(rec, f, indent=2)
+    flag = rec["status"]
+    extra = ""
+    if flag == "OK":
+        mb = rec["full"].get("temp_size_in_bytes", 0) / 2**20
+        extra = (f" compile={rec.get('compile_s', 0):.1f}s temp/dev={mb:.0f}MiB"
+                 f" coll={rec['full']['collectives']}")
+    print(f"[dryrun] {flag} {arch} x {shape_name} ({mesh_tag}){extra}")
+    return rec
+
+
+def main() -> None:
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--arch", default="all")
+    ap.add_argument("--shape", default="all")
+    ap.add_argument("--multi-pod", action="store_true")
+    ap.add_argument("--both-meshes", action="store_true")
+    ap.add_argument("--no-components", action="store_true")
+    ap.add_argument("--force", action="store_true")
+    args = ap.parse_args()
+    archs = list_archs() if args.arch == "all" else [args.arch]
+    shapes = list(INPUT_SHAPES) if args.shape == "all" else [args.shape]
+    meshes = [False, True] if args.both_meshes else [args.multi_pod]
+    for arch in archs:
+        for shape in shapes:
+            for mp in meshes:
+                run_one(arch, shape, multi_pod=mp,
+                        components=not args.no_components, force=args.force)
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,85 @@
+"""ShapeDtypeStruct stand-ins for every (arch x input-shape) combination.
+
+No device allocation: params/optimizer/cache structures come from
+jax.eval_shape over the real init functions, so the dry-run lowers the exact
+production computation.
+"""
+from __future__ import annotations
+
+import dataclasses
+import functools
+from typing import Any, Dict, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+
+from repro.configs.base import InputShape, ModelConfig
+from repro.models import model as M
+from repro.training import optimizer as OPT
+
+SDS = jax.ShapeDtypeStruct
+
+
+def adapt_config(cfg: ModelConfig, shape: InputShape) -> ModelConfig:
+    """Shape-driven config adjustments (documented in DESIGN.md):
+    long_500k on attention archs runs the sliding-window variant."""
+    if shape.name == "long_500k" and cfg.family in ("dense", "moe", "vlm"):
+        cfg = dataclasses.replace(cfg, sliding_window=8192)
+    return cfg
+
+
+def batch_specs(cfg: ModelConfig, shape: InputShape, dtype=jnp.bfloat16) -> Dict[str, SDS]:
+    B = shape.global_batch
+    if shape.kind == "decode":
+        toks = SDS((B, 1), jnp.int32)
+        return {"tokens": toks}
+    S = shape.seq_len
+    out: Dict[str, SDS] = {}
+    if cfg.family == "vlm":
+        S_text = S - cfg.num_vision_tokens
+        out["vision"] = SDS((B, cfg.num_vision_tokens, cfg.d_model), dtype)
+        out["tokens"] = SDS((B, S_text), jnp.int32)
+    elif cfg.family == "audio":
+        out["frames"] = SDS((B, cfg.encoder_seq_len, cfg.d_model), dtype)
+        out["tokens"] = SDS((B, S), jnp.int32)
+    else:
+        out["tokens"] = SDS((B, S), jnp.int32)
+    return out
+
+
+def params_specs(cfg: ModelConfig, shape: InputShape, dtype=jnp.bfloat16):
+    max_pos = max(cfg.max_seq_len, shape.seq_len + 1) if cfg.family == "audio" else None
+    fn = functools.partial(M.init_params, cfg, dtype=dtype, max_positions=max_pos)
+    return jax.eval_shape(fn, jax.random.PRNGKey(0))
+
+
+def opt_specs(params_tree):
+    return jax.eval_shape(OPT.init_state, params_tree)
+
+
+def cache_specs(cfg: ModelConfig, shape: InputShape, dtype=jnp.bfloat16):
+    import os
+    kv_quant = (os.environ.get("REPRO_KV_QUANT") == "1"
+                and cfg.family in ("dense", "moe", "vlm"))
+    fn = functools.partial(M.init_cache, cfg, shape.global_batch, shape.seq_len,
+                           dtype, enc_len=cfg.encoder_seq_len or None,
+                           kv_quant=kv_quant)
+    return jax.eval_shape(fn)
+
+
+def input_specs(cfg: ModelConfig, shape: InputShape, dtype=jnp.bfloat16
+                ) -> Tuple[Any, ...]:
+    """Everything the step function for this shape takes, as abstract values.
+
+    train:   (params, opt_state, batch)
+    prefill: (params, batch, cache)
+    decode:  (params, tokens, cache)
+    """
+    cfg = adapt_config(cfg, shape)
+    params = params_specs(cfg, shape, dtype)
+    if shape.kind == "train":
+        return params, opt_specs(params), batch_specs(cfg, shape, dtype)
+    cache = cache_specs(cfg, shape, dtype)
+    if shape.kind == "prefill":
+        return params, batch_specs(cfg, shape, dtype), cache
+    return params, batch_specs(cfg, shape, dtype)["tokens"], cache

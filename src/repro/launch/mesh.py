@@ -1,0 +1,35 @@
+"""Production mesh construction.
+
+Defined as FUNCTIONS so importing this module never touches jax device
+state. The dry-run entry point (dryrun.py) sets
+XLA_FLAGS=--xla_force_host_platform_device_count=512 BEFORE importing jax.
+"""
+from __future__ import annotations
+
+import jax
+
+
+def make_production_mesh(*, multi_pod: bool = False, moe_experts: int = 0):
+    """16x16 = 256 chips per pod; 2 pods = 512 chips multi-pod.
+
+    moe_experts > 0 factorizes the 16-way model axis into
+    (expert = num_experts, tp = 16 // num_experts) so expert weights shard on
+    their own axis (expert parallelism) and d_ff shards on the remainder —
+    the §Perf fix for MoE whose expert count doesn't divide 16 (grok: 8x2).
+    """
+    if moe_experts:
+        e = min(moe_experts, 16)
+        while 16 % e:
+            e //= 2
+        tp = 16 // e
+        if multi_pod:
+            return jax.make_mesh((2, 16, e, tp), ("pod", "data", "expert", "tp"))
+        return jax.make_mesh((16, e, tp), ("data", "expert", "tp"))
+    shape = (2, 16, 16) if multi_pod else (16, 16)
+    axes = ("pod", "data", "model") if multi_pod else ("data", "model")
+    return jax.make_mesh(shape, axes)
+
+
+def make_debug_mesh(data: int = 1, model: int = 1):
+    """Small mesh for CPU tests (requires len(jax.devices()) >= data*model)."""
+    return jax.make_mesh((data, model), ("data", "model"))

@@ -1,0 +1,64 @@
+"""Training entry point: ``python -m repro.launch.train --arch <id> [...]``.
+
+CPU-sized by default (reduced config). Full configs + the production mesh are
+exercised by dryrun.py; this driver does real optimization steps.
+"""
+from __future__ import annotations
+
+import argparse
+import time
+
+import jax
+
+from repro.configs import get_config
+from repro.models import model as M
+from repro.training import checkpoint as CKPT
+from repro.training import data as D
+from repro.training import optimizer as OPT
+from repro.training.train import train_loop
+
+
+def main() -> None:
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--arch", required=True)
+    ap.add_argument("--steps", type=int, default=200)
+    ap.add_argument("--batch-size", type=int, default=8)
+    ap.add_argument("--seq-len", type=int, default=128)
+    ap.add_argument("--lr", type=float, default=3e-3)
+    ap.add_argument("--full-config", action="store_true",
+                    help="use the full (not reduced) architecture config")
+    ap.add_argument("--remat", action="store_true")
+    ap.add_argument("--checkpoint", default="")
+    ap.add_argument("--data", choices=("arithmetic", "uniform"), default="arithmetic")
+    ap.add_argument("--seed", type=int, default=0)
+    args = ap.parse_args()
+
+    cfg = get_config(args.arch)
+    if not args.full_config:
+        cfg = cfg.reduced()
+    print(f"[train] arch={cfg.name} family={cfg.family} params~"
+          f"{cfg.param_count() / 1e6:.1f}M reduced={not args.full_config}")
+
+    params = M.init_params(cfg, jax.random.PRNGKey(args.seed),
+                           max_positions=max(args.seq_len + 1, 256))
+    opt = OPT.AdamWConfig(lr=args.lr, warmup_steps=max(args.steps // 20, 5),
+                          total_steps=args.steps)
+    stream = (D.arithmetic_stream if args.data == "arithmetic" else
+              D.uniform_stream)(cfg, args.batch_size, args.seq_len,
+                                args.steps, seed=args.seed)
+    t0 = time.time()
+    params, state, hist = train_loop(cfg, params, stream, opt,
+                                     remat=args.remat,
+                                     log_every=max(args.steps // 20, 1))
+    dt = time.time() - t0
+    toks = args.steps * args.batch_size * args.seq_len
+    print(f"[train] {args.steps} steps in {dt:.1f}s "
+          f"({toks / dt:.0f} tok/s); loss {hist[0][1]:.3f} -> {hist[-1][1]:.3f}")
+    if args.checkpoint:
+        CKPT.save(args.checkpoint, params, state,
+                  {"arch": cfg.name, "steps": args.steps, "final_loss": hist[-1][1]})
+        print(f"[train] checkpoint -> {args.checkpoint}")
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,142 @@
+"""Shared neural-net layers (raw JAX pytrees — no flax).
+
+Conventions:
+  * params are nested dicts of jnp arrays;
+  * every ``*_init`` returns the param subtree, every ``*_apply`` is pure;
+  * compute-sensitive reductions run in f32 and cast back to the io dtype.
+"""
+from __future__ import annotations
+
+from typing import Optional, Sequence
+
+import jax
+import jax.numpy as jnp
+
+
+# --------------------------------------------------------------------------- init
+def dense_init(key, in_dim: int, out_dim: int, dtype, *, scale: Optional[float] = None,
+               bias: bool = False):
+    if scale is None:
+        scale = in_dim ** -0.5
+    w = (jax.random.normal(key, (in_dim, out_dim), jnp.float32) * scale).astype(dtype)
+    if bias:
+        return {"w": w, "b": jnp.zeros((out_dim,), dtype)}
+    return {"w": w}
+
+
+def embed_init(key, vocab: int, dim: int, dtype):
+    return {"emb": (jax.random.normal(key, (vocab, dim), jnp.float32) * 0.02).astype(dtype)}
+
+
+def linear(params, x):
+    y = x @ params["w"]
+    if "b" in params:
+        y = y + params["b"]
+    return y
+
+
+# --------------------------------------------------------------------------- norms
+def rmsnorm_init(dim: int, dtype):
+    return {"scale": jnp.ones((dim,), dtype)}
+
+
+def rmsnorm(params, x, eps: float = 1e-5):
+    xf = x.astype(jnp.float32)
+    var = jnp.mean(xf * xf, axis=-1, keepdims=True)
+    y = xf * jax.lax.rsqrt(var + eps)
+    return (y * params["scale"].astype(jnp.float32)).astype(x.dtype)
+
+
+def layernorm_init(dim: int, dtype):
+    return {"scale": jnp.ones((dim,), dtype), "bias": jnp.zeros((dim,), dtype)}
+
+
+def layernorm(params, x, eps: float = 1e-5):
+    xf = x.astype(jnp.float32)
+    mu = jnp.mean(xf, axis=-1, keepdims=True)
+    var = jnp.mean((xf - mu) ** 2, axis=-1, keepdims=True)
+    y = (xf - mu) * jax.lax.rsqrt(var + eps)
+    return (y * params["scale"].astype(jnp.float32)
+            + params["bias"].astype(jnp.float32)).astype(x.dtype)
+
+
+def norm_init(kind: str, dim: int, dtype):
+    return rmsnorm_init(dim, dtype) if kind == "rmsnorm" else layernorm_init(dim, dtype)
+
+
+def norm_apply(kind: str, params, x):
+    return rmsnorm(params, x) if kind == "rmsnorm" else layernorm(params, x)
+
+
+# --------------------------------------------------------------------------- rope
+def _rope_angles(positions: jnp.ndarray, head_dim: int, theta: float) -> jnp.ndarray:
+    """positions (..., S) -> angles (..., S, head_dim//2), f32."""
+    half = head_dim // 2
+    inv_freq = 1.0 / (theta ** (jnp.arange(half, dtype=jnp.float32) / half))
+    return positions.astype(jnp.float32)[..., None] * inv_freq
+
+
+def apply_rope(x: jnp.ndarray, positions: jnp.ndarray, theta: float) -> jnp.ndarray:
+    """x (B, H, S, D), positions (B, S). Split-half (llama) convention."""
+    B, H, S, D = x.shape
+    ang = _rope_angles(positions, D, theta)            # (B, S, D/2)
+    cos = jnp.cos(ang)[:, None, :, :]
+    sin = jnp.sin(ang)[:, None, :, :]
+    x1, x2 = jnp.split(x.astype(jnp.float32), 2, axis=-1)
+    out = jnp.concatenate([x1 * cos - x2 * sin, x1 * sin + x2 * cos], axis=-1)
+    return out.astype(x.dtype)
+
+
+def apply_mrope(x: jnp.ndarray, positions3: jnp.ndarray, theta: float,
+                sections: Sequence[int]) -> jnp.ndarray:
+    """Multimodal RoPE (Qwen2-VL, arXiv:2409.12191).
+
+    x (B, H, S, D); positions3 (B, S, 3) = (temporal, height, width) ids.
+    The D/2 rotary frequencies are partitioned into 3 contiguous sections,
+    each rotated by its own position id stream.
+    """
+    B, H, S, D = x.shape
+    half = D // 2
+    assert sum(sections) == half, (sections, half)
+    inv_freq = 1.0 / (theta ** (jnp.arange(half, dtype=jnp.float32) / half))
+    # pick, per frequency index, which of the 3 position streams drives it
+    sec_id = jnp.repeat(jnp.arange(3), jnp.asarray(sections), total_repeat_length=half)
+    pos = jnp.take_along_axis(
+        positions3.astype(jnp.float32),                 # (B, S, 3)
+        jnp.broadcast_to(sec_id[None, None, :], (B, S, half)).astype(jnp.int32),
+        axis=-1)                                        # (B, S, half)
+    ang = pos * inv_freq                                # (B, S, half)
+    cos = jnp.cos(ang)[:, None, :, :]
+    sin = jnp.sin(ang)[:, None, :, :]
+    x1, x2 = jnp.split(x.astype(jnp.float32), 2, axis=-1)
+    out = jnp.concatenate([x1 * cos - x2 * sin, x1 * sin + x2 * cos], axis=-1)
+    return out.astype(x.dtype)
+
+
+def sinusoidal_positions(seq_len: int, dim: int) -> jnp.ndarray:
+    """Classic transformer sinusoids (whisper encoder)."""
+    pos = jnp.arange(seq_len, dtype=jnp.float32)[:, None]
+    idx = jnp.arange(dim // 2, dtype=jnp.float32)[None, :]
+    angle = pos / (10000.0 ** (2 * idx / dim))
+    return jnp.concatenate([jnp.sin(angle), jnp.cos(angle)], axis=-1)
+
+
+# --------------------------------------------------------------------------- mlp
+def mlp_init(key, d_model: int, d_ff: int, activation: str, dtype):
+    k1, k2, k3 = jax.random.split(key, 3)
+    if activation in ("swiglu", "geglu"):
+        return {"gate": dense_init(k1, d_model, d_ff, dtype),
+                "up": dense_init(k2, d_model, d_ff, dtype),
+                "down": dense_init(k3, d_ff, d_model, dtype)}
+    return {"up": dense_init(k1, d_model, d_ff, dtype, bias=True),
+            "down": dense_init(k2, d_ff, d_model, dtype, bias=True)}
+
+
+def mlp_apply(params, x, activation: str):
+    if activation == "swiglu":
+        h = jax.nn.silu(linear(params["gate"], x)) * linear(params["up"], x)
+    elif activation == "geglu":
+        h = jax.nn.gelu(linear(params["gate"], x)) * linear(params["up"], x)
+    else:  # gelu
+        h = jax.nn.gelu(linear(params["up"], x))
+    return linear(params["down"], h)

@@ -1,0 +1,169 @@
+"""Mixture-of-Experts FFN with top-k routing and fixed-capacity dispatch.
+
+TPU-friendly design: no dynamic shapes. Tokens are sorted by expert id
+(argsort), ranked within their expert group, and scattered into an
+(E, capacity) buffer; expert FFNs run as one batched einsum over the expert
+dimension (expert-parallel shardable on the "model" mesh axis); results are
+combined back weighted by router probabilities. Tokens overflowing an
+expert's capacity are dropped (standard Switch/GShard semantics) — with
+capacity_factor 1.25 and top-2 this is rare at the batch sizes we serve.
+"""
+from __future__ import annotations
+
+import os
+
+import jax
+import jax.numpy as jnp
+
+from repro.configs.base import ModelConfig
+from repro.models import layers as L
+
+
+def moe_init(key, cfg: ModelConfig, dtype):
+    E, d, ff = cfg.moe.num_experts, cfg.d_model, cfg.d_ff
+    kr, kg, ku, kd = jax.random.split(key, 4)
+    scale = d ** -0.5
+    glu = cfg.activation in ("swiglu", "geglu")
+    p = {
+        "router": {"w": (jax.random.normal(kr, (d, E), jnp.float32) * scale).astype(dtype)},
+        "up": (jax.random.normal(ku, (E, d, ff), jnp.float32) * scale).astype(dtype),
+        "down": (jax.random.normal(kd, (E, ff, d), jnp.float32) * (ff ** -0.5)).astype(dtype),
+    }
+    if glu:
+        p["gate"] = (jax.random.normal(kg, (E, d, ff), jnp.float32) * scale).astype(dtype)
+    return p
+
+
+def moe_apply(params, cfg: ModelConfig, x, *, dropless: bool = False):
+    """x: (B, S, d) -> (y, aux_loss). Fixed-capacity top-k dispatch.
+
+    dropless=True sets capacity = T (each expert can absorb every token):
+    zero drops guaranteed. Used for decode, where the extra slots are dead
+    FLOPs hidden under the memory roof (decode streams all expert weights
+    from HBM anyway) — see DESIGN.md.
+    """
+    mcfg = cfg.moe
+    B, S, d = x.shape
+    T = B * S
+    E, k = mcfg.num_experts, mcfg.num_experts_per_tok
+
+    # Perf-iteration lever (REPRO_MOE_DISPATCH):
+    #   global  — one argsort/gather/scatter over ALL tokens (baseline).
+    #             Under SPMD the data-sharded token tensor must be all-gathered
+    #             for the global sort: O(T*d) collective per layer.
+    #   grouped — Switch/GShard-style per-group dispatch: tokens are split into
+    #             groups aligned with the data shards, each group routes into a
+    #             per-group capacity slice. The only cross-shard traffic is the
+    #             dispatched (E, C, d) buffer (all-to-all-shaped), which is
+    #             k/E-fraction of the baseline's all-gather.
+    if (os.environ.get("REPRO_MOE_DISPATCH", "global") == "grouped"
+            and not dropless and T >= 4096):
+        return _moe_apply_grouped(params, cfg, x)
+    if dropless:
+        C = T
+    else:
+        C = max(1, min(T, int(mcfg.capacity_factor * T * k / E)))
+
+    xt = x.reshape(T, d)
+    logits = (xt @ params["router"]["w"]).astype(jnp.float32)       # (T, E)
+    probs = jax.nn.softmax(logits, axis=-1)
+    gate_vals, expert_idx = jax.lax.top_k(probs, k)                 # (T, k)
+    gate_vals = gate_vals / jnp.sum(gate_vals, axis=-1, keepdims=True)
+
+    # ---- load-balance auxiliary loss (Switch-style) --------------------------
+    me = jnp.mean(probs, axis=0)                                    # (E,)
+    ce = jnp.mean(jax.nn.one_hot(expert_idx[:, 0], E, dtype=jnp.float32), axis=0)
+    aux = E * jnp.sum(me * ce) * mcfg.router_aux_loss_coef
+
+    # ---- fixed-capacity dispatch ---------------------------------------------
+    flat_expert = expert_idx.reshape(-1)                            # (T*k,)
+    flat_gate = gate_vals.reshape(-1)
+    flat_token = jnp.repeat(jnp.arange(T), k)                       # (T*k,)
+    order = jnp.argsort(flat_expert, stable=True)                   # group by expert
+    sorted_expert = flat_expert[order]
+    sorted_token = flat_token[order]
+    sorted_gate = flat_gate[order]
+    # rank within expert group
+    same = jnp.cumsum(jax.nn.one_hot(sorted_expert, E, dtype=jnp.int32), axis=0)
+    rank = jnp.take_along_axis(same, sorted_expert[:, None], axis=1)[:, 0] - 1
+    keep = rank < C
+    slot = sorted_expert * C + jnp.where(keep, rank, 0)             # (T*k,)
+
+    # gather tokens into (E*C, d)
+    buf = jnp.zeros((E * C, d), x.dtype)
+    src = xt[sorted_token] * keep[:, None].astype(x.dtype)
+    buf = buf.at[slot].add(src)                                     # each slot written once
+    buf = buf.reshape(E, C, d)
+
+    # ---- expert FFN (batched over E; shardable on model axis) ---------------
+    if "gate" in params:
+        h = jax.nn.silu(jnp.einsum("ecd,edf->ecf", buf, params["gate"])) \
+            * jnp.einsum("ecd,edf->ecf", buf, params["up"])
+    else:
+        h = jax.nn.gelu(jnp.einsum("ecd,edf->ecf", buf, params["up"]))
+    out = jnp.einsum("ecf,efd->ecd", h, params["down"]).reshape(E * C, d)
+
+    # ---- combine back ---------------------------------------------------------
+    gathered = out[slot] * (sorted_gate * keep).astype(x.dtype)[:, None]
+    y = jnp.zeros((T, d), x.dtype).at[sorted_token].add(gathered)
+    return y.reshape(B, S, d), aux
+
+
+NUM_DISPATCH_GROUPS = 16     # aligned with the "data" mesh axis
+
+
+def _moe_apply_grouped(params, cfg: ModelConfig, x):
+    """Group-local dispatch: vmap the sort/capacity machinery over G groups so
+    routing index math never crosses data shards; the expert einsum contracts
+    the grouped buffer (G, E, Cg, d) against model-sharded expert weights."""
+    mcfg = cfg.moe
+    B, S, d = x.shape
+    T = B * S
+    E, k = mcfg.num_experts, mcfg.num_experts_per_tok
+    G = min(NUM_DISPATCH_GROUPS, T)
+    while T % G:
+        G //= 2
+    Tg = T // G
+    Cg = max(1, min(Tg, int(mcfg.capacity_factor * Tg * k / E)))
+
+    xt = x.reshape(G, Tg, d)
+    logits = (xt @ params["router"]["w"]).astype(jnp.float32)       # (G, Tg, E)
+    probs = jax.nn.softmax(logits, axis=-1)
+    gate_vals, expert_idx = jax.lax.top_k(probs, k)                 # (G, Tg, k)
+    gate_vals = gate_vals / jnp.sum(gate_vals, axis=-1, keepdims=True)
+
+    me = jnp.mean(probs.reshape(T, E), axis=0)
+    ce = jnp.mean(jax.nn.one_hot(expert_idx[..., 0].reshape(T), E,
+                                 dtype=jnp.float32), axis=0)
+    aux = E * jnp.sum(me * ce) * mcfg.router_aux_loss_coef
+
+    def dispatch_one(xg, eidx, gval):
+        flat_e = eidx.reshape(-1)                                   # (Tg*k,)
+        flat_g = gval.reshape(-1)
+        flat_t = jnp.repeat(jnp.arange(Tg), k)
+        order = jnp.argsort(flat_e, stable=True)
+        se, stok, sg = flat_e[order], flat_t[order], flat_g[order]
+        same = jnp.cumsum(jax.nn.one_hot(se, E, dtype=jnp.int32), axis=0)
+        rank = jnp.take_along_axis(same, se[:, None], axis=1)[:, 0] - 1
+        keep = rank < Cg
+        slot = se * Cg + jnp.where(keep, rank, 0)
+        buf = jnp.zeros((E * Cg, xg.shape[-1]), xg.dtype)
+        buf = buf.at[slot].add(xg[stok] * keep[:, None].astype(xg.dtype))
+        return buf.reshape(E, Cg, xg.shape[-1]), (slot, stok, sg, keep)
+
+    buf, meta = jax.vmap(dispatch_one)(xt, expert_idx, gate_vals)   # (G,E,Cg,d)
+
+    if "gate" in params:
+        h = jax.nn.silu(jnp.einsum("gecd,edf->gecf", buf, params["gate"])) \
+            * jnp.einsum("gecd,edf->gecf", buf, params["up"])
+    else:
+        h = jax.nn.gelu(jnp.einsum("gecd,edf->gecf", buf, params["up"]))
+    out = jnp.einsum("gecf,efd->gecd", h, params["down"])           # (G,E,Cg,d)
+
+    def combine_one(og, m):
+        slot, stok, sg, keep = m
+        gathered = og.reshape(E * Cg, d)[slot] * (sg * keep).astype(og.dtype)[:, None]
+        return jnp.zeros((Tg, d), og.dtype).at[stok].add(gathered)
+
+    y = jax.vmap(combine_one)(out, meta)                            # (G, Tg, d)
+    return y.reshape(B, S, d), aux

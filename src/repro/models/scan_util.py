@@ -1,0 +1,24 @@
+"""Layer-stack scan with a global unroll switch.
+
+Default: lax.scan (one compiled body — fast compiles at 30-64 layers).
+REPRO_SCAN_UNROLL=1: fully unrolled — used by the dry-run's component
+compiles because XLA's HloCostAnalysis counts a while-loop body ONCE
+regardless of trip count (verified empirically), so FLOP accounting needs
+unrolled HLO. The dry-run unrolls tiny (L=1, L=2) variants and extrapolates.
+"""
+from __future__ import annotations
+
+import os
+
+import jax
+
+
+def unroll_enabled() -> bool:
+    return os.environ.get("REPRO_SCAN_UNROLL", "0") == "1"
+
+
+def layer_scan(body, carry, xs, length=None):
+    """jax.lax.scan honoring the global unroll flag (checked at trace time)."""
+    if unroll_enabled():
+        return jax.lax.scan(body, carry, xs, length=length, unroll=True)
+    return jax.lax.scan(body, carry, xs, length=length)

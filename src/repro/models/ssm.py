@@ -1,0 +1,120 @@
+"""Mamba2 block (SSD form) — arXiv:2405.21060.
+
+Projection layout (single fused in_proj, as in the reference implementation):
+    [z (d_inner) | x (d_inner) | B (N) | C (N) | dt (n_heads)]
+Causal depthwise conv runs over the concatenated (x, B, C) channels.
+The sequence mix is the chunked SSD scan (Pallas kernel / jnp oracle).
+"""
+from __future__ import annotations
+
+from typing import Optional
+
+import jax
+import jax.numpy as jnp
+
+from repro.configs.base import ModelConfig
+from repro.kernels import ops
+from repro.models import layers as L
+
+
+def mamba_init(key, cfg: ModelConfig, dtype):
+    s = cfg.ssm
+    d, di, N = cfg.d_model, cfg.d_inner, s.state_dim
+    H = cfg.ssm_heads
+    conv_ch = di + 2 * N
+    k1, k1b, k1c, k2, k3, k4 = jax.random.split(key, 6)
+    return {
+        # split projections (vs the reference's fused in_proj) so the output
+        # dims shard cleanly on the tensor-parallel axis: 2*di and 2*N are
+        # 16-divisible for every assigned config, H often is not.
+        "zx_proj": L.dense_init(k1, d, 2 * di, dtype),
+        "bc_proj": L.dense_init(k1b, d, 2 * N, dtype),
+        "dt_proj": L.dense_init(k1c, d, H, dtype),
+        "conv_w": (jax.random.normal(k2, (s.conv_width, conv_ch), jnp.float32) * 0.2).astype(dtype),
+        "conv_b": jnp.zeros((conv_ch,), dtype),
+        "A_log": jnp.log(jnp.linspace(1.0, 16.0, H)).astype(jnp.float32),
+        "D": jnp.ones((H,), jnp.float32),
+        "dt_bias": (jax.random.uniform(k3, (H,), jnp.float32,
+                                       minval=-4.0, maxval=-1.0)),
+        "gate_norm": L.rmsnorm_init(di, dtype),
+        "out_proj": L.dense_init(k4, di, d, dtype),
+    }
+
+
+def _causal_conv(x, w, b):
+    """x (B, S, C), w (W, C) depthwise causal conv, b (C,)."""
+    W = w.shape[0]
+    xp = jnp.pad(x, ((0, 0), (W - 1, 0), (0, 0)))
+    out = jax.lax.conv_general_dilated(
+        xp.astype(jnp.float32),
+        w.astype(jnp.float32)[:, None, :],      # (W, 1, C)
+        window_strides=(1,), padding="VALID",
+        dimension_numbers=("NWC", "WIO", "NWC"),
+        feature_group_count=w.shape[1])
+    return (out + b.astype(jnp.float32)).astype(x.dtype)
+
+
+def _project(params, cfg: ModelConfig, x):
+    s = cfg.ssm
+    di, N = cfg.d_inner, s.state_dim
+    zx = L.linear(params["zx_proj"], x)                        # (B, S, 2di)
+    bc = L.linear(params["bc_proj"], x)                        # (B, S, 2N)
+    dt = L.linear(params["dt_proj"], x)                        # (B, S, H)
+    z, xb = jnp.split(zx, [di], axis=-1)
+    Bm, Cm = jnp.split(bc, [N], axis=-1)
+    return z, xb, Bm, Cm, dt
+
+
+def mamba_apply(params, cfg: ModelConfig, x, *, backend: str = "auto"):
+    """Full-sequence (train / prefill without cache). x (B,S,d) -> y (B,S,d)."""
+    y, _, _ = mamba_apply_with_state(params, cfg, x, backend=backend)
+    return y
+
+
+def mamba_apply_with_state(params, cfg: ModelConfig, x, *, backend: str = "auto"):
+    """Returns (y, conv_state (B, W-1, conv_ch), ssm_state (B, H, P, N))."""
+    s = cfg.ssm
+    B, S, d = x.shape
+    di, N, H, P = cfg.d_inner, s.state_dim, cfg.ssm_heads, s.head_dim
+    z, xb, Bm, Cm, dt = _project(params, cfg, x)
+    conv_in = jnp.concatenate([xb, Bm, Cm], axis=-1)           # (B, S, conv_ch)
+    conv_out = jax.nn.silu(_causal_conv(conv_in, params["conv_w"], params["conv_b"]))
+    xb, Bm, Cm = jnp.split(conv_out, [di, di + N], axis=-1)
+    dt = jax.nn.softplus(dt.astype(jnp.float32) + params["dt_bias"])   # (B, S, H)
+    A = -jnp.exp(params["A_log"])                              # (H,) negative
+    xh = xb.reshape(B, S, H, P).transpose(0, 2, 1, 3)          # (B, H, S, P)
+    dth = dt.transpose(0, 2, 1)                                # (B, H, S)
+    yh, final_state = ops.ssd_scan(xh, dth, A, Bm, Cm, chunk=s.chunk_size,
+                                   backend=backend)
+    yh = (yh + params["D"][None, :, None, None] * xh).astype(x.dtype)  # skip
+    y = yh.transpose(0, 2, 1, 3).reshape(B, S, di)
+    y = L.rmsnorm(params["gate_norm"], y * jax.nn.silu(z))     # gated norm
+    y = L.linear(params["out_proj"], y)
+    conv_state = conv_in[:, -(s.conv_width - 1):, :] if S >= s.conv_width - 1 else \
+        jnp.pad(conv_in, ((0, 0), (s.conv_width - 1 - S, 0), (0, 0)))
+    return y, conv_state, final_state
+
+
+def mamba_decode_step(params, cfg: ModelConfig, x, conv_state, ssm_state):
+    """One-token decode. x (B, 1, d); conv_state (B, W-1, conv_ch);
+    ssm_state (B, H, P, N). Returns (y (B,1,d), conv_state, ssm_state)."""
+    s = cfg.ssm
+    B = x.shape[0]
+    di, N, H, P = cfg.d_inner, s.state_dim, cfg.ssm_heads, s.head_dim
+    z, xb, Bm, Cm, dt = _project(params, cfg, x)
+    conv_in = jnp.concatenate([xb, Bm, Cm], axis=-1)[:, 0, :]  # (B, conv_ch)
+    window = jnp.concatenate([conv_state, conv_in[:, None, :]], axis=1)  # (B, W, ch)
+    w = params["conv_w"].astype(jnp.float32)                   # (W, ch)
+    conv_out = jnp.einsum("bwc,wc->bc", window.astype(jnp.float32), w) \
+        + params["conv_b"].astype(jnp.float32)
+    conv_out = jax.nn.silu(conv_out).astype(x.dtype)           # (B, ch)
+    xb1, Bm1, Cm1 = jnp.split(conv_out, [di, di + N], axis=-1)
+    dt1 = jax.nn.softplus(dt[:, 0, :].astype(jnp.float32) + params["dt_bias"])  # (B, H)
+    A = -jnp.exp(params["A_log"])
+    xh = xb1.reshape(B, H, P)
+    yh, new_state = ops.ssd_decode_step(ssm_state, xh, dt1, A, Bm1, Cm1)
+    yh = (yh + params["D"][None, :, None] * xh).astype(x.dtype)
+    y = yh.reshape(B, 1, di)
+    y = L.rmsnorm(params["gate_norm"], y * jax.nn.silu(z))
+    y = L.linear(params["out_proj"], y)
+    return y, window[:, 1:, :], new_state

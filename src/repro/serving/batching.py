@@ -1,0 +1,115 @@
+"""Continuous batching over a fixed-slot decode batch.
+
+Slot-based engine loop (vLLM-style, TPU-friendly static shapes):
+  * ``slots`` decode lanes share one jit'd decode_step;
+  * finished/empty lanes are refilled by prefilling queued requests into the
+    lane's cache region (prefill runs per-request, decode runs batched);
+  * per-lane kv_len rides in the cache's ``pos`` vector, so ragged contexts
+    are handled by the decode-attention kernel's length masking.
+
+This module is deliberately single-model; cross-pool routing lives in
+``router.py`` (the paper's scheduler).
+"""
+from __future__ import annotations
+
+from dataclasses import dataclass, field
+from typing import Dict, List, Optional
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.configs.base import ModelConfig
+from repro.models import model as M
+from repro.serving.engine import InferenceEngine
+
+
+@dataclass
+class Request:
+    rid: int
+    tokens: np.ndarray              # (m,) prompt
+    max_new_tokens: int
+    out_tokens: List[int] = field(default_factory=list)
+    done: bool = False
+
+
+class ContinuousBatcher:
+    """Fixed-slot continuous batching loop on one engine."""
+
+    def __init__(self, engine: InferenceEngine, slots: int = 4):
+        self.engine = engine
+        self.slots = slots
+        self.queue: List[Request] = []
+        self.active: List[Optional[Request]] = [None] * slots
+        self.cache = engine.new_cache(slots)
+        self._last_tok = jnp.zeros((slots,), jnp.int32)
+
+    def submit(self, req: Request) -> None:
+        self.queue.append(req)
+
+    @property
+    def busy(self) -> bool:
+        return bool(self.queue) or any(r is not None for r in self.active)
+
+    def _fill_slots(self) -> None:
+        for i in range(self.slots):
+            if self.active[i] is None and self.queue:
+                req = self.queue.pop(0)
+                self.active[i] = req
+                m = len(req.tokens)
+                # per-request prefill into a fresh single-lane cache, then
+                # splice the lane into the batched cache
+                lane_cache = M.init_cache(self.engine.cfg, 1, self.engine.max_len,
+                                          self.engine.dtype,
+                                          enc_len=self.engine.cfg.encoder_seq_len or None)
+                batch = {"tokens": jnp.asarray(req.tokens, jnp.int32)[None]}
+                logits, lane_cache = self.engine.prefill(batch, lane_cache)
+                tok = int(jnp.argmax(logits, axis=-1)[0])
+                req.out_tokens.append(tok)
+                self._last_tok = self._last_tok.at[i].set(tok)
+                self.cache = _splice_lane(self.cache, lane_cache, i)
+
+    def step(self) -> None:
+        """One scheduler tick: refill empty lanes, one batched decode step."""
+        self._fill_slots()
+        live = [i for i, r in enumerate(self.active) if r is not None]
+        if not live:
+            return
+        logits, self.cache = self.engine.decode(self._last_tok[:, None], self.cache)
+        toks = np.asarray(jnp.argmax(logits, axis=-1), np.int32)
+        for i in live:
+            req = self.active[i]
+            req.out_tokens.append(int(toks[i]))
+            self._last_tok = self._last_tok.at[i].set(int(toks[i]))
+            if len(req.out_tokens) >= req.max_new_tokens:
+                req.done = True
+                self.active[i] = None
+                self.cache = _clear_lane(self.cache, i)
+
+    def run(self, max_ticks: int = 10_000) -> None:
+        ticks = 0
+        while self.busy and ticks < max_ticks:
+            self.step()
+            ticks += 1
+
+
+# --------------------------------------------------------------------- lane ops
+def _splice_lane(cache: Dict, lane: Dict, i: int) -> Dict:
+    """Copy single-lane cache (batch dim 1) into batch position i."""
+    out = dict(cache)
+    for k, v in cache.items():
+        lv = lane[k]
+        if k == "pos":
+            out[k] = v.at[i].set(lv[0])
+        elif v.ndim >= 2 and v.shape[0] == lv.shape[0]:   # leading layer dim
+            out[k] = v.at[:, i].set(lv[:, 0])
+        else:
+            out[k] = v.at[i].set(lv[0])
+    return out
+
+
+def _clear_lane(cache: Dict, i: int) -> Dict:
+    """Free a lane. Only ``pos`` needs resetting: the decode kernels mask by
+    kv_len, so stale KV rows are unreachable; SSM states are overwritten by
+    the next splice."""
+    return dict(cache, pos=cache["pos"].at[i].set(0))

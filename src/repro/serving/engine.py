@@ -1,0 +1,80 @@
+"""Inference engine: jit'd prefill / decode steps over the model zoo.
+
+The engine owns params + compiled step functions for one architecture on one
+(logical) system. Generation is greedy (argmax) by default; sampling hooks
+accept a temperature. Energy/runtime accounting per request is attached via
+the core analytic model so the FleetRouter can report fleet-level totals.
+"""
+from __future__ import annotations
+
+import functools
+from dataclasses import dataclass, field
+from typing import Dict, List, Optional
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.configs.base import ModelConfig
+from repro.models import model as M
+
+
+@dataclass
+class GenerationResult:
+    tokens: np.ndarray            # (B, n_out) generated tokens
+    prompt_len: int
+    steps: int
+
+
+class InferenceEngine:
+    """Single-model engine with a fixed max context and batch size."""
+
+    def __init__(self, cfg: ModelConfig, params, *, max_len: int = 512,
+                 backend: str = "auto", dtype=jnp.float32):
+        self.cfg = cfg
+        self.params = params
+        self.max_len = max_len
+        self.backend = backend
+        self.dtype = dtype
+        self._prefill = jax.jit(functools.partial(M.prefill, cfg=cfg, backend=backend))
+        self._decode = jax.jit(functools.partial(M.decode_step, cfg=cfg, backend=backend))
+
+    # ------------------------------------------------------------------ api
+    def new_cache(self, batch_size: int):
+        return M.init_cache(self.cfg, batch_size, self.max_len, self.dtype,
+                            enc_len=self.cfg.encoder_seq_len or None)
+
+    def prefill(self, batch: Dict[str, jnp.ndarray], cache=None):
+        B = batch["tokens"].shape[0]
+        if cache is None:
+            cache = self.new_cache(B)
+        logits, cache = self._prefill(params=self.params, batch=batch, cache=cache)
+        return logits, cache
+
+    def decode(self, tokens: jnp.ndarray, cache):
+        return self._decode(params=self.params, tokens=tokens, cache=cache)
+
+    def generate(self, batch: Dict[str, jnp.ndarray], max_new_tokens: int = 32,
+                 *, temperature: float = 0.0, key=None,
+                 eos_id: Optional[int] = None) -> GenerationResult:
+        """Greedy (or sampled) generation. All requests share prompt length."""
+        B, S = batch["tokens"].shape
+        logits, cache = self.prefill(batch)
+        out = []
+        tok = self._select(logits, temperature, key, 0)
+        out.append(tok)
+        for i in range(max_new_tokens - 1):
+            logits, cache = self.decode(tok[:, None], cache)
+            tok = self._select(logits, temperature, key, i + 1)
+            out.append(tok)
+            if eos_id is not None and bool(jnp.all(tok == eos_id)):
+                break
+        toks = np.stack([np.asarray(t) for t in out], axis=1)
+        return GenerationResult(tokens=toks, prompt_len=S, steps=toks.shape[1])
+
+    @staticmethod
+    def _select(logits, temperature, key, step):
+        if temperature <= 0.0:
+            return jnp.argmax(logits, axis=-1).astype(jnp.int32)
+        k = jax.random.fold_in(key, step)
+        return jax.random.categorical(k, logits / temperature).astype(jnp.int32)

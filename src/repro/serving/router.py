@@ -1,0 +1,104 @@
+"""FleetRouter: the paper's scheduler as a first-class serving feature.
+
+A fleet is a set of *pools*; each pool is (SystemProfile, engine-or-batcher,
+instance count). Incoming requests carry (m, expected_n); the router prices
+them with the core cost model and dispatches per the configured policy
+(threshold / cost-optimal / capacity-aware). Execution on this CPU container
+is functional (every pool runs the same JAX engine); energy/runtime are
+accounted analytically per the assigned pool's profile — exactly the
+quantity the paper optimizes.
+"""
+from __future__ import annotations
+
+from dataclasses import dataclass, field
+from typing import Dict, List, Optional, Sequence
+
+import numpy as np
+
+from repro.configs.base import ModelConfig
+from repro.core.cost import CostParams
+from repro.core.energy import energy
+from repro.core.perf_model import runtime
+from repro.core.scheduler import (CapacityAwareScheduler, CostOptimalScheduler,
+                                  Scheduler, ThresholdScheduler)
+from repro.core.systems import SystemProfile
+from repro.core.workload import Query
+from repro.serving.engine import InferenceEngine
+
+
+@dataclass
+class PoolStats:
+    queries: int = 0
+    energy_j: float = 0.0
+    runtime_s: float = 0.0
+    tokens: int = 0
+
+
+@dataclass
+class RoutedRequest:
+    rid: int
+    pool: str
+    energy_j: float
+    runtime_s: float
+    output: Optional[np.ndarray] = None
+
+
+class FleetRouter:
+    def __init__(self, cfg: ModelConfig, pools: Dict[str, SystemProfile],
+                 engines: Optional[Dict[str, InferenceEngine]] = None, *,
+                 policy: str = "threshold", t_in: int = 32, t_out: int = 32,
+                 axis: str = "in", lam: float = 1.0,
+                 counts: Optional[Dict[str, int]] = None):
+        self.cfg = cfg
+        self.pools = pools
+        self.engines = engines or {}
+        self.stats = {name: PoolStats() for name in pools}
+        systems = list(pools.values())
+        cp = CostParams(lam=lam)
+        if policy == "threshold":
+            eff = next(s for s in systems if s.kind == "eff")
+            perf = next(s for s in systems if s.kind == "perf")
+            self.scheduler: Scheduler = ThresholdScheduler(
+                cfg, eff, perf, t_in=t_in, t_out=t_out, axis=axis, cp=cp)
+        elif policy == "cost_optimal":
+            self.scheduler = CostOptimalScheduler(cfg, systems, cp)
+        elif policy == "capacity_aware":
+            self.scheduler = CapacityAwareScheduler(
+                cfg, systems, counts or {s.name: 1 for s in systems}, cp)
+        else:
+            raise ValueError(policy)
+        self._name_of = {id(s): n for n, s in pools.items()}
+        self._rid = 0
+
+    def route(self, m: int, expected_n: int, arrival_s: float = 0.0) -> str:
+        """Pick a pool for an (m, n) request; update accounting."""
+        q = Query(m, expected_n, arrival_s)
+        sys = self.scheduler.choose(q) if hasattr(self.scheduler, "choose") else \
+            self.scheduler.assign([q])[0].system
+        name = self._name_of[id(sys)]
+        st = self.stats[name]
+        st.queries += 1
+        st.energy_j += energy(self.cfg, m, expected_n, sys)
+        st.runtime_s += runtime(self.cfg, m, expected_n, sys)
+        st.tokens += m + expected_n
+        return name
+
+    def submit(self, tokens: np.ndarray, max_new_tokens: int,
+               arrival_s: float = 0.0) -> RoutedRequest:
+        """Route AND execute (if an engine is attached to the pool)."""
+        self._rid += 1
+        name = self.route(len(tokens), max_new_tokens, arrival_s)
+        out = None
+        if name in self.engines:
+            import jax.numpy as jnp
+            res = self.engines[name].generate(
+                {"tokens": jnp.asarray(tokens, jnp.int32)[None]}, max_new_tokens)
+            out = res.tokens[0]
+        sysp = self.pools[name]
+        return RoutedRequest(self._rid, name,
+                             energy(self.cfg, len(tokens), max_new_tokens, sysp),
+                             runtime(self.cfg, len(tokens), max_new_tokens, sysp),
+                             out)
+
+    def fleet_report(self) -> Dict[str, Dict]:
+        return {n: vars(s) for n, s in self.stats.items()}

@@ -1,0 +1,237 @@
+"""Partition specs for params, caches and batches.
+
+Strategy (Megatron-style tensor parallel on the "model" axis, data parallel
+on "data", pure replicas across "pod"):
+
+  * embeddings / unembed: vocab dim on "model";
+  * attention q/k/v: output (head) dim on "model" where divisible, o: input
+    dim on "model";
+  * mlp up/gate: d_ff on "model"; down: d_ff (input) on "model";
+  * MoE: expert dim on "model" when expert count divides, else d_ff within
+    experts on "model" (grok: 8 experts on a 16-way axis);
+  * mamba: d_inner-shaped dims on "model";
+  * batch dims on "data"; for decode shapes whose batch doesn't divide the
+    axis, the KV-cache *sequence* dim shards on "data" instead (long-context
+    mode) — the flash-decode masking makes per-shard softmax partials exact
+    under GSPMD's collective lowering.
+
+Every spec passes through ``_fit``: any dim not divisible by its mesh axis is
+replicated, so one rule set serves all 10 architectures.
+"""
+from __future__ import annotations
+
+from typing import Any, Dict, Optional
+
+import jax
+import numpy as np
+from jax.sharding import Mesh, NamedSharding, PartitionSpec as P
+
+from repro.configs.base import InputShape, ModelConfig
+
+
+def _axis_size(mesh: Mesh, name: Optional[str]) -> int:
+    if name is None:
+        return 1
+    return mesh.shape.get(name, 1) if hasattr(mesh.shape, "get") else mesh.shape[name]
+
+
+def model_axes(mesh: Mesh):
+    """The tensor-parallel axis group: "model", or ("expert","tp") on MoE
+    meshes where the 16-way axis is factorized for expert parallelism."""
+    return ("expert", "tp") if "expert" in mesh.shape else "model"
+
+
+def _remap(mesh: Mesh, spec: P) -> P:
+    """Replace the logical "model" axis with the mesh's TP axis group."""
+    ma = model_axes(mesh)
+    if ma == "model":
+        return spec
+    out = []
+    for ax in tuple(spec):
+        if ax == "model":
+            out.append(ma)
+        elif isinstance(ax, tuple):
+            out.append(tuple(ma if a == "model" else a for a in ax))
+        else:
+            out.append(ax)
+    return P(*out)
+
+
+def _fit(mesh: Mesh, shape, spec: P) -> P:
+    """Drop sharding on dims that the mesh axis doesn't divide."""
+    fixed = []
+    for dim, ax in zip(shape, tuple(spec) + (None,) * (len(shape) - len(spec))):
+        if ax is None:
+            fixed.append(None)
+            continue
+        axes = ax if isinstance(ax, tuple) else (ax,)
+        total = int(np.prod([_axis_size(mesh, a) for a in axes]))
+        fixed.append(ax if dim % total == 0 else None)
+    return P(*fixed)
+
+
+def named(mesh: Mesh, shape, *axes) -> NamedSharding:
+    return NamedSharding(mesh, _fit(mesh, shape, P(*axes)))
+
+
+# --------------------------------------------------------------------- params
+def param_spec(cfg: ModelConfig, path: str, shape, expert_mesh: bool = False) -> P:
+    """Logical spec by param path (joined with '/'). Leading stacked-layer
+    dims (from lax.scan stacking) are never sharded."""
+    n = path.split("/")
+    leaf = n[-1]
+    parent = n[-2] if len(n) >= 2 else ""
+    gp = n[-3] if len(n) >= 3 else ""
+
+    def base(spec: P) -> P:
+        # prepend None for the stacked layer dim if present
+        extra = len(shape) - len(spec)
+        return P(*((None,) * extra + tuple(spec))) if extra > 0 else spec
+
+    if leaf == "emb":           # (V, d) token / (S, d) position embeddings
+        if parent in ("dec_pos",):
+            return base(P(None, None))
+        return base(P("model", None))
+    if parent in ("q", "k", "v") or gp in ("q", "k", "v"):
+        if leaf == "w":
+            return base(P(None, "model"))
+        return base(P("model"))            # bias on the sharded output dim
+    if parent == "o":
+        return base(P("model", None)) if leaf == "w" else base(P(None))
+    if parent in ("gate", "up"):
+        return base(P(None, "model")) if leaf == "w" else base(P("model"))
+    if parent == "down":
+        return base(P("model", None)) if leaf == "w" else base(P(None))
+    if parent == "router":
+        return base(P(None, None))
+    if leaf in ("gate", "up") and "moe" in n:       # moe expert stacks (E, d, ff)
+        if expert_mesh:
+            return base(P("expert", None, "tp"))
+        return base(P("model", None, None)) if shape_div(shape, -3) else base(P(None, None, "model"))
+    if leaf == "down" and "moe" in n:               # (E, ff, d)
+        if expert_mesh:
+            return base(P("expert", "tp", None))
+        return base(P("model", None, None)) if shape_div(shape, -3) else base(P(None, "model", None))
+    if parent in ("zx_proj", "bc_proj"):            # mamba (d, 2di) / (d, 2N)
+        return base(P(None, "model")) if leaf == "w" else base(P("model"))
+    if parent == "dt_proj":                         # (d, H): H rarely divides
+        return base(P(None, None))
+    if parent == "out_proj":                        # (di, d)
+        return base(P("model", None)) if leaf == "w" else base(P(None))
+    if leaf in ("conv_w", "conv_b"):
+        return base(P()) if leaf == "conv_b" else base(P(None, None))
+    # norms, A_log, D, dt_bias, scalars
+    return P(*((None,) * len(shape)))
+
+
+def shape_div(shape, idx: int, by: int = 16) -> bool:
+    try:
+        return shape[idx] % by == 0
+    except IndexError:
+        return False
+
+
+def params_shardings(mesh: Mesh, params_tree) -> Any:
+    """NamedSharding tree matching a (possibly abstract) params pytree.
+
+    REPRO_SHARDING=replicated switches to pure data parallelism (params
+    replicated, batch sharded) — the right-sized strategy for models far
+    smaller than the mesh (§Perf: smollm-360m), where TP activation
+    all-reduces dominate and per-chip weights are tiny anyway.
+    """
+    import os
+    replicated = os.environ.get("REPRO_SHARDING") == "replicated"
+    flat, treedef = jax.tree_util.tree_flatten_with_path(params_tree)
+    out = []
+    for path, leaf in flat:
+        if replicated:
+            out.append(NamedSharding(mesh, P()))
+            continue
+        keys = [getattr(p, "key", getattr(p, "idx", "")) for p in path]
+        pstr = "/".join(str(k) for k in keys)
+        spec = param_spec_from_path(pstr, leaf.shape,
+                                    expert_mesh="expert" in mesh.shape)
+        spec = _remap(mesh, spec)
+        out.append(NamedSharding(mesh, _fit(mesh, leaf.shape, spec)))
+    return jax.tree_util.tree_unflatten(treedef, out)
+
+
+def param_spec_from_path(pstr: str, shape, expert_mesh: bool = False) -> P:
+    # cfg not needed: rules are purely structural
+    return param_spec(None, pstr, shape, expert_mesh)   # type: ignore[arg-type]
+
+
+def opt_state_shardings(mesh: Mesh, mu_tree) -> Any:
+    """Optimizer-moment shardings. REPRO_ZERO=1 adds ZeRO-1: each moment
+    leaf additionally shards its first divisible, still-unsharded dim over
+    "data" (moments are only touched at the update point, so slicing them
+    across data ranks costs one reduce-scatter/all-gather pair per step but
+    divides their 8-bytes/param residency by the data-axis size)."""
+    import os
+    base = params_shardings(mesh, mu_tree)
+    if os.environ.get("REPRO_ZERO") != "1":
+        return base
+    dsize = _axis_size(mesh, "data")
+    flat_b, treedef = jax.tree_util.tree_flatten(base)
+    flat_l = jax.tree_util.tree_leaves(mu_tree)
+    out = []
+    for sh, leaf in zip(flat_b, flat_l):
+        spec = list(tuple(sh.spec) + (None,) * (leaf.ndim - len(tuple(sh.spec))))
+        for i, (dim, ax) in enumerate(zip(leaf.shape, spec)):
+            if ax is None and dim % dsize == 0:
+                spec[i] = "data"
+                break
+        out.append(NamedSharding(mesh, P(*spec)))
+    return jax.tree_util.tree_unflatten(treedef, out)
+
+
+# --------------------------------------------------------------------- batch/cache
+def batch_shardings(mesh: Mesh, batch_tree, shape_kind: str = "train") -> Any:
+    """Shard batch dims on ("pod","data") when divisible; else replicate."""
+    dp = ("pod", "data") if "pod" in mesh.shape else ("data",)
+
+    def one(leaf):
+        spec = [dp if i == 0 else None for i in range(leaf.ndim)]
+        return NamedSharding(mesh, _fit(mesh, leaf.shape, P(*spec)))
+    return jax.tree.map(one, batch_tree)
+
+
+def cache_shardings(mesh: Mesh, cache_tree, *, seq_shard: bool = False) -> Any:
+    """KV caches: (L, B, Hkv, S, D) — batch on data, heads on model.
+    seq_shard=True (long-context, batch=1): shard the sequence dim on data
+    instead of batch."""
+    dp = ("pod", "data") if "pod" in mesh.shape else ("data",)
+
+    def one_named(path, leaf):
+        keys = [str(getattr(p, "key", "")) for p in path]
+        name = keys[-1] if keys else ""
+        nd = leaf.ndim
+        if name == "pos":
+            spec = P(dp) if not seq_shard else P(None)
+        elif name in ("k", "v", "ak", "av", "ck", "cv",
+                      "k_scale", "v_scale") and nd == 5:
+            # (L, B, Hkv, S, D)
+            ma = model_axes(mesh)
+            tp_total = (int(np.prod([_axis_size(mesh, a) for a in ma]))
+                        if isinstance(ma, tuple) else _axis_size(mesh, ma))
+            if seq_shard:
+                # long-context mode (batch < data axis): sequence on data
+                spec = P(None, None, "model", dp, None)
+            elif leaf.shape[2] % tp_total == 0:
+                spec = P(None, dp, "model", None, None)
+            else:
+                # GQA head count doesn't divide the model axis: shard the
+                # sequence dim on "model" instead of replicating 16x the cache
+                # (flash-decode partials merge exactly under GSPMD collectives)
+                spec = P(None, dp, None, "model", None)
+        elif name == "conv" and nd == 4:        # (L, B, W-1, ch)
+            spec = P(None, dp if not seq_shard else None, None, "model")
+        elif name == "ssm" and nd == 5:         # (L, B, H, P, N)
+            spec = P(None, dp if not seq_shard else None, "model", None, None)
+        else:
+            spec = P(*(None,) * nd)
+        return NamedSharding(mesh, _fit(mesh, leaf.shape, _remap(mesh, spec)))
+
+    flat, treedef = jax.tree_util.tree_flatten_with_path(cache_tree)
+    return jax.tree_util.tree_unflatten(
+        treedef, [one_named(p, l) for p, l in flat])

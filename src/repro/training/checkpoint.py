@@ -1,0 +1,54 @@
+"""Checkpointing: flatten param/optimizer pytrees to a single .npz + json meta."""
+from __future__ import annotations
+
+import json
+import os
+from typing import Any, Dict, Tuple
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+
+def _flatten(tree, prefix="") -> Dict[str, np.ndarray]:
+    out = {}
+    if isinstance(tree, dict):
+        for k in sorted(tree):
+            out.update(_flatten(tree[k], f"{prefix}{k}/"))
+    elif isinstance(tree, (list, tuple)):
+        for i, v in enumerate(tree):
+            out.update(_flatten(v, f"{prefix}{i}/"))
+    else:
+        out[prefix[:-1]] = np.asarray(tree)
+    return out
+
+
+def save(path: str, params, opt_state=None, meta: Dict[str, Any] = None) -> None:
+    os.makedirs(os.path.dirname(path) or ".", exist_ok=True)
+    flat = _flatten({"params": params, **({"opt": opt_state} if opt_state else {})})
+    np.savez(path, **flat)
+    with open(path + ".meta.json", "w") as f:
+        json.dump(meta or {}, f, indent=2, default=str)
+
+
+def restore(path: str, params_template, opt_template=None) -> Tuple[Any, Any, Dict]:
+    """Restore into the structure of the given templates."""
+    data = np.load(path if path.endswith(".npz") else path + ".npz")
+    meta = {}
+    mp = path + ".meta.json"
+    if os.path.exists(mp):
+        with open(mp) as f:
+            meta = json.load(f)
+
+    def rebuild(template, prefix):
+        if isinstance(template, dict):
+            return {k: rebuild(v, f"{prefix}{k}/") for k, v in template.items()}
+        if isinstance(template, (list, tuple)):
+            return type(template)(rebuild(v, f"{prefix}{i}/")
+                                  for i, v in enumerate(template))
+        arr = data[prefix[:-1]]
+        return jnp.asarray(arr, dtype=template.dtype if hasattr(template, "dtype") else None)
+
+    params = rebuild(params_template, "params/")
+    opt = rebuild(opt_template, "opt/") if opt_template is not None else None
+    return params, opt, meta

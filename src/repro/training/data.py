@@ -1,0 +1,51 @@
+"""Synthetic data pipeline: seeded, shard-aware, learnable tasks.
+
+``arithmetic_stream`` produces a fully learnable LM task (t_{i+1} =
+(a*t_i + c) mod V) so example training shows a decreasing loss without any
+external dataset. ``uniform_stream`` is for pure throughput benchmarking.
+"""
+from __future__ import annotations
+
+from typing import Dict, Iterator, Optional
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.configs.base import ModelConfig
+
+
+def arithmetic_stream(cfg: ModelConfig, batch_size: int, seq_len: int,
+                      steps: int, seed: int = 0, a: int = 5, c: int = 7,
+                      ) -> Iterator[Dict[str, jnp.ndarray]]:
+    """Affine-recurrence token stream — next token is a deterministic
+    function of the previous one, so a 1-layer model can reach ~0 loss."""
+    rng = np.random.default_rng(seed)
+    V = cfg.vocab_size
+    for _ in range(steps):
+        t0 = rng.integers(0, V, size=(batch_size, 1))
+        seq = [t0]
+        for _ in range(seq_len - 1):
+            seq.append((a * seq[-1] + c) % V)
+        tokens = jnp.asarray(np.concatenate(seq, axis=1), jnp.int32)
+        yield _attach_modalities(cfg, {"tokens": tokens}, rng)
+
+
+def uniform_stream(cfg: ModelConfig, batch_size: int, seq_len: int,
+                   steps: int, seed: int = 0) -> Iterator[Dict[str, jnp.ndarray]]:
+    rng = np.random.default_rng(seed)
+    for _ in range(steps):
+        tokens = jnp.asarray(rng.integers(0, cfg.vocab_size,
+                                          size=(batch_size, seq_len)), jnp.int32)
+        yield _attach_modalities(cfg, {"tokens": tokens}, rng)
+
+
+def _attach_modalities(cfg: ModelConfig, batch: Dict, rng) -> Dict:
+    B = batch["tokens"].shape[0]
+    if cfg.family == "audio":
+        batch["frames"] = jnp.asarray(
+            rng.normal(size=(B, cfg.encoder_seq_len, cfg.d_model)), jnp.float32)
+    if cfg.family == "vlm":
+        batch["vision"] = jnp.asarray(
+            rng.normal(size=(B, cfg.num_vision_tokens, cfg.d_model)), jnp.float32)
+    return batch

@@ -1,0 +1,83 @@
+"""Training loop: loss, train_step, metrics."""
+from __future__ import annotations
+
+import functools
+import os
+from typing import Any, Dict, Tuple
+
+import jax
+import jax.numpy as jnp
+
+from repro.configs.base import ModelConfig
+from repro.models import model as M
+from repro.training import optimizer as OPT
+
+
+def _nll(pred, tgt):
+    """Per-position negative log likelihood.
+
+    REPRO_LOSS_IMPL selects the implementation (perf-iteration lever):
+      softmax   — materialize the full (B, S, V) f32 log_softmax (baseline)
+      logsumexp — nll = logsumexp(logits) - logits[target]: only (B, S) f32
+                  temporaries beyond the bf16 logits themselves (optimized)
+    """
+    impl = os.environ.get("REPRO_LOSS_IMPL", "softmax")  # baseline default;
+    # §Perf runs flip to logsumexp and record the delta
+    if impl == "softmax":
+        logp = jax.nn.log_softmax(pred.astype(jnp.float32), axis=-1)
+        return -jnp.take_along_axis(logp, tgt[..., None], axis=-1)[..., 0]
+    predf = pred.astype(jnp.float32)
+    lse = jax.nn.logsumexp(predf, axis=-1)                       # (B, S)
+    picked = jnp.take_along_axis(predf, tgt[..., None], axis=-1)[..., 0]
+    return lse - picked
+
+
+def lm_loss(params, cfg: ModelConfig, batch: Dict[str, jnp.ndarray], *,
+            backend: str = "auto", remat: bool = False) -> Tuple[jnp.ndarray, Dict]:
+    """Next-token cross entropy.
+
+    batch["tokens"] (B, S) — positions 1..S-1 are predicted from 0..S-2.
+    batch["loss_mask"] optional (B, S): 1 where the *target* counts.
+    VLM: loss applies to text positions only (vision tokens are inputs).
+    """
+    logits, aux = M.forward_train(params, cfg, batch, backend=backend, remat=remat)
+    tokens = batch["tokens"]
+    B, S_text = tokens.shape
+    n_vis = logits.shape[1] - S_text          # 0 except VLM
+    logits = logits[:, n_vis:, :]             # text-aligned
+    nll = _nll(logits[:, :-1], tokens[:, 1:])
+    mask = batch.get("loss_mask")
+    mask = jnp.ones_like(nll) if mask is None else mask[:, 1:].astype(jnp.float32)
+    loss = jnp.sum(nll * mask) / jnp.maximum(1.0, jnp.sum(mask))
+    return loss + aux, {"ce": loss, "aux": aux}
+
+
+def make_train_step(cfg: ModelConfig, opt: OPT.AdamWConfig, *,
+                    backend: str = "auto", remat: bool = False):
+    """Returns a jit-able train_step(params, opt_state, batch)."""
+
+    def train_step(params, opt_state, batch):
+        (loss, parts), grads = jax.value_and_grad(
+            lambda p: lm_loss(p, cfg, batch, backend=backend, remat=remat),
+            has_aux=True)(params)
+        params, opt_state, om = OPT.apply_updates(opt, params, grads, opt_state)
+        metrics = {"loss": loss, **parts, **om}
+        return params, opt_state, metrics
+
+    return train_step
+
+
+def train_loop(cfg: ModelConfig, params, batches, opt: OPT.AdamWConfig, *,
+               backend: str = "auto", remat: bool = False, log_every: int = 10,
+               log=print):
+    step_fn = jax.jit(make_train_step(cfg, opt, backend=backend, remat=remat))
+    state = OPT.init_state(params)
+    history = []
+    for i, batch in enumerate(batches):
+        params, state, m = step_fn(params, state, batch)
+        if i % log_every == 0:
+            loss = float(m["loss"])
+            history.append((i, loss))
+            log(f"step {i:5d}  loss {loss:.4f}  lr {float(m['lr']):.2e}  "
+                f"gnorm {float(m['grad_norm']):.2f}")
+    return params, state, history

@@ -1,0 +1,7 @@
+import os
+import sys
+
+# tests see ONE cpu device (the dry-run sets its own XLA_FLAGS internally and
+# runs as a separate process — never import repro.launch.dryrun from tests
+# before jax is initialized elsewhere)
+sys.path.insert(0, os.path.join(os.path.dirname(__file__), "..", "src"))

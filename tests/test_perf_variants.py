@@ -1,0 +1,77 @@
+"""The perf-iteration levers (EXPERIMENTS.md §Perf) must preserve semantics
+exactly: baseline and optimized implementations are interchangeable."""
+import dataclasses
+import os
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.configs import get_config
+from repro.models import model as M
+from repro.models import moe as MOE
+from repro.training.train import lm_loss
+
+KEY = jax.random.PRNGKey(0)
+
+
+@pytest.fixture
+def env():
+    saved = {k: os.environ.get(k) for k in
+             ("REPRO_LOSS_IMPL", "REPRO_CACHE_MODE", "REPRO_MOE_DISPATCH")}
+    yield os.environ
+    for k, v in saved.items():
+        if v is None:
+            os.environ.pop(k, None)
+        else:
+            os.environ[k] = v
+
+
+def test_loss_impls_equal(env):
+    cfg = get_config("smollm-360m").reduced()
+    params = M.init_params(cfg, KEY)
+    batch = {"tokens": jax.random.randint(KEY, (2, 24), 0, cfg.vocab_size)}
+    env["REPRO_LOSS_IMPL"] = "softmax"
+    l1, _ = lm_loss(params, cfg, batch)
+    env["REPRO_LOSS_IMPL"] = "logsumexp"
+    l2, _ = lm_loss(params, cfg, batch)
+    assert abs(float(l1 - l2)) < 1e-5
+    # gradients too
+    env["REPRO_LOSS_IMPL"] = "softmax"
+    g1 = jax.grad(lambda p: lm_loss(p, cfg, batch)[0])(params)
+    env["REPRO_LOSS_IMPL"] = "logsumexp"
+    g2 = jax.grad(lambda p: lm_loss(p, cfg, batch)[0])(params)
+    err = max(float(jnp.abs(a - b).max())
+              for a, b in zip(jax.tree.leaves(g1), jax.tree.leaves(g2)))
+    assert err < 1e-5
+
+
+@pytest.mark.parametrize("arch", ["qwen2.5-3b", "phi3.5-moe-42b-a6.6b"])
+def test_cache_modes_equal(env, arch):
+    cfg = get_config(arch).reduced()
+    params = M.init_params(cfg, KEY)
+    tok = jax.random.randint(KEY, (2, 20), 0, cfg.vocab_size)
+    cache = M.init_cache(cfg, 2, 64)
+    _, cache = M.prefill(params, cfg, {"tokens": tok[:, :16]}, cache)
+    env["REPRO_CACHE_MODE"] = "scan"
+    lg_s, cache_s = M.decode_step(params, cfg, tok[:, 16:17], dict(cache))
+    env["REPRO_CACHE_MODE"] = "carry"
+    lg_c, cache_c = M.decode_step(params, cfg, tok[:, 16:17], dict(cache))
+    np.testing.assert_allclose(np.asarray(lg_s), np.asarray(lg_c), atol=1e-5)
+    np.testing.assert_allclose(np.asarray(cache_s["k"]), np.asarray(cache_c["k"]),
+                               atol=1e-6)
+
+
+def test_moe_dispatch_modes_equal_at_dropless_capacity(env):
+    cfg = get_config("phi3.5-moe-42b-a6.6b").reduced()
+    cfg = dataclasses.replace(cfg, moe=dataclasses.replace(
+        cfg.moe, capacity_factor=float(cfg.moe.num_experts) / cfg.moe.num_experts_per_tok))
+    p = MOE.moe_init(KEY, cfg, jnp.float32)
+    x = jax.random.normal(KEY, (2, 4096, cfg.d_model)) * 0.1
+    env["REPRO_MOE_DISPATCH"] = "global"
+    yg, auxg = MOE.moe_apply(p, cfg, x)
+    env["REPRO_MOE_DISPATCH"] = "grouped"
+    yl, auxl = MOE.moe_apply(p, cfg, x)
+    np.testing.assert_allclose(np.asarray(yg), np.asarray(yl), atol=1e-5)
+    assert abs(float(auxg - auxl)) < 1e-6

@@ -1,0 +1,102 @@
+"""Property tests (hypothesis) for the paper's Eq. 2 partition problem and
+the scheduler implementations."""
+import hypothesis.strategies as st
+import pytest
+from hypothesis import given, settings
+
+from repro.configs import get_config
+from repro.core import (CapacityAwareScheduler, CostOptimalScheduler, CostParams,
+                        Query, RoundRobinScheduler, SingleSystemScheduler,
+                        ThresholdScheduler, cost, energy, paper_fleet, runtime,
+                        simulate, tpu_fleet)
+
+CFG = get_config("deepseek-7b")
+EFF, PERF = paper_fleet()
+
+queries_st = st.lists(
+    st.builds(Query,
+              m=st.integers(min_value=1, max_value=2048),
+              n=st.integers(min_value=1, max_value=512),
+              arrival_s=st.floats(min_value=0, max_value=100)),
+    min_size=1, max_size=40)
+
+
+@given(queries_st)
+@settings(max_examples=25, deadline=None)
+def test_partition_complete_and_disjoint(qs):
+    """Eq. 3/4: every query assigned exactly once."""
+    for sched in (ThresholdScheduler(CFG, EFF, PERF),
+                  CostOptimalScheduler(CFG, [EFF, PERF]),
+                  RoundRobinScheduler(CFG, [EFF, PERF])):
+        assignments = sched.assign(qs)
+        assert len(assignments) == len(qs)
+        assert all(a.system in (EFF, PERF) for a in assignments)
+
+
+@given(queries_st, st.floats(min_value=0.0, max_value=1.0))
+@settings(max_examples=25, deadline=None)
+def test_cost_optimal_dominates_for_its_lambda(qs, lam):
+    """Per-query argmin is optimal for the uncapacitated separable objective:
+    no other policy can have lower total cost at the same lambda."""
+    cp = CostParams(lam=lam)
+    opt = CostOptimalScheduler(CFG, [EFF, PERF], cp)
+    base = ThresholdScheduler(CFG, EFF, PERF, cp=cp)
+
+    def total(assigns):
+        return sum(cp.lam * a.energy_j + (1 - cp.lam) * a.runtime_s
+                   for a in assigns)
+    assert total(opt.assign(qs)) <= total(base.assign(qs)) + 1e-6
+
+
+@given(st.integers(min_value=1, max_value=2048),
+       st.integers(min_value=1, max_value=2048))
+@settings(max_examples=50, deadline=None)
+def test_threshold_routing_rule(m, n):
+    sched = ThresholdScheduler(CFG, EFF, PERF, t_in=32, t_out=64, axis="in")
+    assert sched.choose(Query(m, n)) is (EFF if m <= 32 else PERF)
+    sched_o = ThresholdScheduler(CFG, EFF, PERF, t_in=32, t_out=64, axis="out")
+    assert sched_o.choose(Query(m, n)) is (EFF if n <= 64 else PERF)
+
+
+@given(queries_st)
+@settings(max_examples=15, deadline=None)
+def test_capacity_aware_waits_nonnegative_and_bounded(qs):
+    sched = CapacityAwareScheduler(CFG, [EFF, PERF],
+                                   counts={EFF.name: 2, PERF.name: 1})
+    assigns = sched.assign(qs)
+    assert all(a.wait_s >= 0 for a in assigns)
+    # with infinite-capacity behaviour disabled, waits only arise from overlap
+    total_service = sum(a.runtime_s for a in assigns)
+    assert all(a.wait_s <= total_service for a in assigns)
+
+
+@given(st.integers(min_value=1, max_value=1024),
+       st.integers(min_value=1, max_value=256))
+@settings(max_examples=40, deadline=None)
+def test_energy_runtime_positive_and_monotone_in_tokens(m, n):
+    for s in (EFF, PERF, *tpu_fleet()):
+        assert energy(CFG, m, n, s) > 0
+        assert runtime(CFG, m, n, s) > 0
+        assert energy(CFG, m + 64, n, s) >= energy(CFG, m, n, s)
+        assert energy(CFG, m, n + 64, s) >= energy(CFG, m, n, s)
+        assert runtime(CFG, m, n + 64, s) >= runtime(CFG, m, n, s)
+
+
+@given(st.integers(min_value=1, max_value=512),
+       st.integers(min_value=1, max_value=512),
+       st.floats(min_value=0.0, max_value=1.0))
+@settings(max_examples=40, deadline=None)
+def test_cost_is_convex_combination(m, n, lam):
+    cp = CostParams(lam=lam)
+    for s in (EFF, PERF):
+        u = cost(CFG, m, n, s, cp)
+        e, r = energy(CFG, m, n, s), runtime(CFG, m, n, s)
+        assert min(e, r) - 1e-9 <= u <= max(e, r) + 1e-9
+
+
+def test_single_system_baseline_consistency():
+    qs = [Query(10, 10), Query(1000, 200)]
+    res = simulate(CFG, qs, SingleSystemScheduler(CFG, PERF))
+    assert res.per_system_queries == {PERF.name: 2}
+    assert res.total_energy_j == pytest.approx(
+        sum(energy(CFG, q.m, q.n, PERF) for q in qs))

@@ -1,0 +1,96 @@
+"""Sharding spec rules: divisibility fitting, param coverage, cache modes.
+Runs on a 1x1 CPU mesh (rules are mesh-size-parametric; the 16x16 behaviour
+is exercised by the dry-run sweep)."""
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+from jax.sharding import Mesh, PartitionSpec as P
+
+from repro.configs import get_config, list_archs
+from repro.launch.mesh import make_debug_mesh
+from repro.models import model as M
+from repro.sharding import specs as SH
+
+
+class FakeMesh:
+    """Mesh stub with arbitrary axis sizes for rule testing (no devices)."""
+    def __init__(self, **axes):
+        self.shape = axes
+
+
+def test_fit_drops_nondivisible():
+    mesh = FakeMesh(pod=2, data=16, model=16)
+    assert SH._fit(mesh, (32, 64), P("data", "model")) == P("data", "model")
+    assert SH._fit(mesh, (30, 64), P("data", "model")) == P(None, "model")
+    assert SH._fit(mesh, (32, 65), P("data", "model")) == P("data", None)
+    assert SH._fit(mesh, (5,), P(("pod", "data"))) == P(None)
+
+
+def test_fit_multi_axis_product():
+    mesh = FakeMesh(pod=2, data=16)
+    assert SH._fit(mesh, (64,), P(("pod", "data"))) == P(("pod", "data"))
+    assert SH._fit(mesh, (16,), P(("pod", "data"))) == P(None)
+
+
+@pytest.mark.parametrize("arch", list_archs())
+def test_param_specs_cover_all_leaves(arch):
+    """Every param leaf gets a spec whose ndim matches, and on a 16x16 mesh
+    every sharded dim divides."""
+    cfg = get_config(arch)
+    import functools
+    abstract = jax.eval_shape(
+        functools.partial(M.init_params, cfg, dtype=jnp.bfloat16,
+                          max_positions=cfg.max_seq_len if cfg.family == "audio" else None),
+        jax.random.PRNGKey(0))
+    mesh = FakeMesh(data=16, model=16)
+    flat, _ = jax.tree_util.tree_flatten_with_path(abstract)
+    n_sharded = 0
+    for path, leaf in flat:
+        keys = [str(getattr(p, "key", getattr(p, "idx", ""))) for p in path]
+        spec = SH.param_spec_from_path("/".join(keys), leaf.shape)
+        fitted = SH._fit(mesh, leaf.shape, spec)
+        assert len(tuple(fitted)) <= len(leaf.shape)
+        for dim, ax in zip(leaf.shape, tuple(fitted)):
+            if ax is not None:
+                n_sharded += 1
+                assert dim % 16 == 0, (keys, leaf.shape, fitted)
+    # the model must actually be tensor-parallel: layer params are STACKED
+    # (one leaf per weight type), so >=3 sharded leaf-dims means the core
+    # matmul weights all shard
+    assert n_sharded >= 3, arch
+
+
+def test_cache_shardings_modes():
+    cfg = get_config("qwen2.5-3b")      # kv=2: heads don't divide 16
+    cache = jax.eval_shape(lambda: M.init_cache(cfg, 128, 1024, jnp.bfloat16))
+    mesh = FakeMesh(data=16, model=16)
+
+    flat, treedef = jax.tree_util.tree_flatten_with_path(cache)
+    # emulate cache_shardings logic without NamedSharding (no real mesh here)
+    for path, leaf in flat:
+        name = str(getattr(path[-1], "key", ""))
+        if name in ("k", "v"):
+            assert leaf.shape[2] == 2   # kv heads
+            # heads dim not divisible -> rule must pick seq-on-model
+            assert leaf.shape[3] % 16 == 0
+
+
+def test_cache_shardings_real_mesh():
+    """On a real (1,1) mesh the NamedSharding tree builds for every family."""
+    mesh = make_debug_mesh(1, 1)
+    for arch in ("qwen2.5-3b", "mamba2-130m", "zamba2-1.2b", "whisper-base"):
+        cfg = get_config(arch)
+        cache = jax.eval_shape(
+            lambda c=cfg: M.init_cache(c, 8, 64, jnp.float32,
+                                       enc_len=c.encoder_seq_len or None))
+        sh = SH.cache_shardings(mesh, cache)
+        assert jax.tree_util.tree_structure(sh) == jax.tree_util.tree_structure(cache)
+
+
+def test_params_shardings_real_mesh():
+    mesh = make_debug_mesh(1, 1)
+    cfg = get_config("smollm-360m").reduced()
+    params = M.init_params(cfg, jax.random.PRNGKey(0))
+    sh = SH.params_shardings(mesh, params)
+    assert jax.tree_util.tree_structure(sh) == jax.tree_util.tree_structure(params)

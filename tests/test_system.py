@@ -1,0 +1,67 @@
+"""End-to-end behaviour tests for the paper's system: a hybrid fleet serving
+a workload, with the paper's scheduler measurably beating the workload-unaware
+baseline, on top of real JAX inference."""
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.configs import get_config
+from repro.core import (CostOptimalScheduler, Query, SingleSystemScheduler,
+                        ThresholdScheduler, alpaca_like, headline, paper_fleet,
+                        simulate)
+from repro.models import model as M
+from repro.serving.engine import InferenceEngine
+from repro.serving.router import FleetRouter
+
+
+def test_end_to_end_hybrid_beats_unaware():
+    """The paper's claim, end to end: threshold scheduler at T*=32 consumes
+    less energy on an Alpaca-like workload than any single-pool policy."""
+    cfg = get_config("deepseek-7b")
+    eff, perf = paper_fleet()
+    qs = alpaca_like(3000, seed=5)
+    hd = headline(cfg, qs, eff, perf, t_in=32, axis="in")
+    assert hd.savings_vs_all_perf > 0.02      # >2% floor; calibrated ~18%
+    assert hd.hybrid.total_energy_j < hd.baselines["all_eff"].total_energy_j
+    # both pools actually used
+    assert len(hd.hybrid.per_system_queries) == 2
+
+
+def test_cost_optimal_beats_threshold_on_joint_workload():
+    """Beyond-paper: exact per-query argmin beats the threshold heuristic."""
+    cfg = get_config("deepseek-7b")
+    eff, perf = paper_fleet()
+    qs = alpaca_like(2000, seed=6)
+    th = simulate(cfg, qs, ThresholdScheduler(cfg, eff, perf, t_in=32, t_out=32,
+                                              axis="both"))
+    co = simulate(cfg, qs, CostOptimalScheduler(cfg, [eff, perf]))
+    assert co.total_energy_j <= th.total_energy_j
+
+
+def test_served_tokens_flow_through_router():
+    """Requests routed AND executed produce real tokens from the JAX engine."""
+    cfg = get_config("smollm-360m").reduced()
+    params = M.init_params(cfg, jax.random.PRNGKey(0))
+    eng = InferenceEngine(cfg, params, max_len=64)
+    eff, perf = paper_fleet()
+    router = FleetRouter(cfg, {"eff": eff, "perf": perf},
+                         {"eff": eng, "perf": eng}, policy="threshold", t_in=16)
+    outs = [router.submit(np.arange(4), 5), router.submit(np.arange(40), 5)]
+    assert outs[0].pool == "eff" and outs[1].pool == "perf"
+    for o in outs:
+        assert o.output is not None and o.output.shape == (5,)
+        assert (o.output >= 0).all() and (o.output < cfg.vocab_size).all()
+    rep = router.fleet_report()
+    assert rep["eff"]["energy_j"] > 0 and rep["perf"]["energy_j"] > 0
+
+
+def test_scheduler_respects_lambda_extremes():
+    """lambda=0 -> pure speed: everything goes to the performance system;
+    lambda=1 -> small queries go to the efficiency system."""
+    from repro.core import CostParams
+    cfg = get_config("deepseek-7b")
+    eff, perf = paper_fleet()
+    fast = CostOptimalScheduler(cfg, [eff, perf], CostParams(lam=0.0))
+    assert fast.choose(Query(4, 4)) is perf
+    green = CostOptimalScheduler(cfg, [eff, perf], CostParams(lam=1.0))
+    assert green.choose(Query(4, 4)) is eff
