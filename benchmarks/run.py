@@ -42,6 +42,20 @@ def main() -> None:
     _timed("crossover_table", F.crossover_table,
            lambda rows: f"archs={len(rows)}")
 
+    # discrete-event fleet simulator (PR 1): zero-load check + burst sweep
+    from benchmarks import fleet_sweep as FS
+    _timed("fleet_zero_load_check",
+           lambda: FS.zero_load_threshold_sweep(100),
+           lambda rows: "status=" + ("OK" if all(r[-1] == "OK" for r in rows)
+                                     else "MISMATCH"))
+    def burst_derive(rows):
+        by = {r[0]: r for r in rows}
+        thr, cap = by["threshold_in32"], by["capacity_aware"]
+        return (f"p99 {float(cap[4]):.1f}s vs {float(thr[4]):.1f}s; "
+                f"fleetE {float(cap[2]):.0f}J vs {float(thr[2]):.0f}J")
+    _timed("fleet_burst_policy", lambda: FS.burst_policy_comparison(300),
+           burst_derive)
+
     # roofline from dry-run artifacts (if present)
     def roof(rows=None):
         rows = R.analyze_all("16x16")

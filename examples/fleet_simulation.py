@@ -1,0 +1,80 @@
+"""Discrete-event fleet simulation demo: the same dispatch policies the
+static analysis compares, now under time — arrivals, queueing, finite
+instance counts, and continuous-batching service.
+
+Shows (1) the zero-load limit collapsing onto the static accounting,
+(2) a bursty MMPP stream where queue-aware dispatch wins p99 latency at
+lower fleet energy, and (3) routed *execution* through the FleetRouter's
+per-pool ContinuousBatcher backend with EOS-aware completion.
+
+Run: PYTHONPATH=src python examples/fleet_simulation.py [--queries 200]
+"""
+import argparse
+
+import jax
+import numpy as np
+
+from repro.configs import get_config
+from repro.core import (CapacityAwareScheduler, PoolSpec, ThresholdScheduler,
+                        WorkloadSpec, paper_fleet, sample_workload, simulate,
+                        simulate_fleet)
+from repro.core.cost import normalized_cost_params
+from repro.models import model as M
+from repro.serving.engine import InferenceEngine
+from repro.serving.router import FleetRouter
+
+
+def main():
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--queries", type=int, default=200)
+    ap.add_argument("--arch", default="llama2-7b")
+    args = ap.parse_args()
+
+    cfg = get_config(args.arch)
+    eff, perf = paper_fleet()
+
+    # ---- 1. zero-load limit == static accounting -----------------------------
+    calm = sample_workload(50, seed=3, spec=WorkloadSpec(rate_qps=1e-3))
+    sched = ThresholdScheduler(cfg, eff, perf, t_in=32)
+    static = simulate(cfg, calm, sched)
+    fleet0 = simulate_fleet(cfg, calm, {"eff": PoolSpec(eff, 50, 1),
+                                        "perf": PoolSpec(perf, 50, 1)}, sched)
+    rel = abs(fleet0.total_energy_j - static.total_energy_j) / static.total_energy_j
+    print(f"zero-load: static={static.total_energy_j:.1f} J, "
+          f"event-driven={fleet0.total_energy_j:.1f} J (rel err {rel:.1e})")
+
+    # ---- 2. bursty stream: static threshold vs queue-aware dispatch ----------
+    burst = sample_workload(args.queries, seed=7,
+                            spec=WorkloadSpec(rate_qps=3.0),
+                            arrival_process="mmpp")
+    pools = {"eff": PoolSpec(eff, 4, 2), "perf": PoolSpec(perf, 2, 4)}
+    cp = normalized_cost_params(cfg, perf, lam=0.9)
+    print(f"\nbursty MMPP stream ({args.queries} queries @ 3 qps mean):")
+    for name, s in (("threshold T_in=32", ThresholdScheduler(cfg, eff, perf, t_in=32)),
+                    ("capacity-aware", CapacityAwareScheduler(
+                        cfg, [eff, perf], {eff.name: 4, perf.name: 2}, cp))):
+        r = simulate_fleet(cfg, burst, pools, s, policy_name=name)
+        u = {k: f"{p.utilization:.0%}" for k, p in r.per_pool.items()}
+        print(f"  {name:20s} fleet E={r.fleet_energy_j:9.0f} J  "
+              f"p50={r.p50_latency_s:7.2f}s  p99={r.p99_latency_s:7.2f}s  util={u}")
+
+    # ---- 3. routed execution via per-pool continuous batching ----------------
+    ecfg = get_config("smollm-360m").reduced()
+    params = M.init_params(ecfg, jax.random.PRNGKey(0))
+    engine = InferenceEngine(ecfg, params, max_len=96)
+    router = FleetRouter(ecfg, {"eff": eff, "perf": perf},
+                         {"eff": engine, "perf": engine}, policy="threshold",
+                         t_in=32)
+    router.attach_batchers(slots=2)
+    rng = np.random.default_rng(0)
+    routed = [router.submit(rng.integers(0, ecfg.vocab_size, size=8 + 8 * (i % 5)),
+                            max_new_tokens=8, eos_id=0)
+              for i in range(8)]
+    router.drain()
+    done = sum(1 for rr in routed if rr.request is not None and rr.request.done)
+    print(f"\nrouted execution: {done}/{len(routed)} requests served "
+          f"(EOS-aware), split={ {n: s['queries'] for n, s in router.fleet_report().items()} }")
+
+
+if __name__ == "__main__":
+    main()

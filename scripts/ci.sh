@@ -1,0 +1,14 @@
+#!/usr/bin/env bash
+# Tier-1 verification (ROADMAP.md): the suite must COLLECT cleanly and pass
+# with or without the optional test deps (hypothesis). A hard import of an
+# optional dep in a test module kills collection of the entire suite — this
+# script exists so that regression can't recur silently.
+set -euo pipefail
+cd "$(dirname "$0")/.."
+
+export PYTHONPATH="src${PYTHONPATH:+:$PYTHONPATH}"
+
+# collection must produce zero errors even before running anything
+python -m pytest -q --collect-only >/dev/null
+
+python -m pytest -x -q

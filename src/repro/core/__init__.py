@@ -6,10 +6,16 @@ from repro.core.perf_model import runtime, throughput, query_phases
 from repro.core.energy import (energy, energy_per_token_in, energy_per_token_out,
                                crossover_threshold)
 from repro.core.cost import CostParams, cost, normalized_cost_params
-from repro.core.workload import Query, WorkloadSpec, sample_workload, alpaca_like, token_histogram
+from repro.core.workload import (Query, WorkloadSpec, sample_workload, alpaca_like,
+                                 token_histogram, generate_arrivals,
+                                 poisson_arrivals, diurnal_arrivals,
+                                 mmpp_arrivals, trace_arrivals)
 from repro.core.scheduler import (Scheduler, ThresholdScheduler, CostOptimalScheduler,
                                   CapacityAwareScheduler, SingleSystemScheduler,
-                                  RoundRobinScheduler, Assignment)
+                                  RoundRobinScheduler, Assignment,
+                                  FleetState, PoolSnapshot)
 from repro.core.simulator import (simulate, summarize, threshold_sweep,
                                   optimal_threshold, headline, SimResult,
                                   SweepPoint, HeadlineResult)
+from repro.core.fleet import (FleetSimulator, FleetSimResult, PoolSpec,
+                              RequestRecord, PoolResult, simulate_fleet)

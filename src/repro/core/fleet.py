@@ -1,0 +1,444 @@
+"""Discrete-event fleet simulator: time-aware evaluation of dispatch policies.
+
+The static path (``simulator.simulate``) prices each query independently —
+correct for the paper's Section 6 accounting, but blind to arrivals,
+queueing, batching, and finite instance counts. This module simulates the
+fleet as a discrete-event system so every ``Scheduler`` policy is compared
+under identical queueing dynamics via the uniform online
+``dispatch(query, fleet_state)`` API.
+
+Event loop (heap-ordered, deterministic under a fixed workload seed):
+
+  * **arrival**    — a query arrives; the policy dispatches it to a pool
+                     (given a ``FleetState`` snapshot) and it joins the pool's
+                     FIFO or priority queue.
+  * **dispatch**   — a queued request is admitted to a free slot on the
+                     least-loaded instance; per-request overhead + prefill
+                     begin (prefill runs per-request, as in
+                     ``serving.batching.ContinuousBatcher``).
+  * **batch-step** — an instance's decode group advances. Decode steps are
+                     shared across co-resident requests (the batcher's slot
+                     model): each resident's per-token time is the analytic
+                     ``query_phases(..., batch=b).t_decode / n`` at the current
+                     occupancy ``b``, so weight streaming amortizes across the
+                     batch. The loop re-linearizes on every occupancy change
+                     instead of emitting one event per token.
+  * **completion** — a resident finishes its output tokens; the slot frees
+                     and the queue refills it.
+
+Energy accounting attributes instance power to residents (power at the
+resident's utilization, split ``1/b`` across the batch), which makes the
+zero-load / infinite-capacity limit reduce *exactly* to the static
+``simulate()`` totals: batch=1 service reproduces ``energy(cfg, m, n, s)``
+and ``runtime(cfg, m, n, s)`` term by term. Idle (allocated-but-unused)
+energy over the makespan is reported separately as ``idle_energy_j`` so the
+request-attributed total stays comparable to the static path.
+"""
+from __future__ import annotations
+
+import heapq
+import itertools
+from dataclasses import dataclass
+from typing import Dict, List, Optional, Sequence, Tuple
+
+import numpy as np
+
+from repro.configs.base import ModelConfig
+from repro.core.perf_model import query_phases, runtime
+from repro.core.scheduler import FleetState, PoolSnapshot, Scheduler
+from repro.core.systems import SystemProfile
+from repro.core.workload import Query
+
+ARRIVAL, INSTANCE = 0, 1      # event kinds (INSTANCE = batch-step/completion)
+
+
+# ------------------------------------------------------------------ fleet spec
+@dataclass(frozen=True)
+class PoolSpec:
+    """One pool: a system profile replicated ``instances`` times, each
+    instance running ``slots`` continuous-batching decode lanes."""
+    system: SystemProfile
+    instances: int = 1
+    slots: int = 1
+
+
+# --------------------------------------------------------------------- records
+@dataclass
+class RequestRecord:
+    rid: int
+    query: Query
+    pool: str
+    t_arrival: float
+    t_start: float = 0.0          # admitted to an instance (queue wait ends)
+    t_decode: float = 0.0         # prefill done, decoding begins
+    t_done: float = 0.0
+    energy_j: float = 0.0
+
+    @property
+    def wait_s(self) -> float:
+        return self.t_start - self.t_arrival
+
+    @property
+    def latency_s(self) -> float:
+        return self.t_done - self.t_arrival
+
+    @property
+    def service_s(self) -> float:
+        return self.t_done - self.t_start
+
+
+@dataclass
+class PoolResult:
+    queries: int = 0
+    energy_j: float = 0.0
+    idle_energy_j: float = 0.0
+    busy_slot_seconds: float = 0.0
+    utilization: float = 0.0      # busy slot-seconds / (slots * horizon)
+
+
+@dataclass
+class FleetSimResult:
+    policy: str
+    records: List[RequestRecord]
+    per_pool: Dict[str, PoolResult]
+    horizon_s: float              # last completion time
+
+    @property
+    def total_energy_j(self) -> float:
+        return sum(r.energy_j for r in self.records)
+
+    @property
+    def idle_energy_j(self) -> float:
+        return sum(p.idle_energy_j for p in self.per_pool.values())
+
+    @property
+    def fleet_energy_j(self) -> float:
+        """Request-attributed + allocated-idle energy over the makespan."""
+        return self.total_energy_j + self.idle_energy_j
+
+    @property
+    def tokens(self) -> int:
+        return sum(r.query.m + r.query.n for r in self.records)
+
+    @property
+    def j_per_token(self) -> float:
+        return self.total_energy_j / max(1, self.tokens)
+
+    def latency_percentile(self, p: float) -> float:
+        if not self.records:
+            return 0.0
+        return float(np.percentile([r.latency_s for r in self.records], p))
+
+    @property
+    def p50_latency_s(self) -> float:
+        return self.latency_percentile(50)
+
+    @property
+    def p99_latency_s(self) -> float:
+        return self.latency_percentile(99)
+
+    @property
+    def mean_wait_s(self) -> float:
+        if not self.records:
+            return 0.0
+        return float(np.mean([r.wait_s for r in self.records]))
+
+    def summary(self) -> Dict[str, float]:
+        return {
+            "energy_j": self.total_energy_j,
+            "fleet_energy_j": self.fleet_energy_j,
+            "j_per_token": self.j_per_token,
+            "p50_latency_s": self.p50_latency_s,
+            "p99_latency_s": self.p99_latency_s,
+            "mean_wait_s": self.mean_wait_s,
+            "horizon_s": self.horizon_s,
+            "utilization": {n: p.utilization for n, p in self.per_pool.items()},
+        }
+
+
+# ------------------------------------------------------------------- internals
+class _Resident:
+    """A request occupying one slot of an instance."""
+    __slots__ = ("rec", "phases1", "rem_tokens", "prefill_end", "_t_tok")
+
+    def __init__(self, cfg: ModelConfig, rec: RequestRecord, s: SystemProfile,
+                 now: float):
+        self.rec = rec
+        q = rec.query
+        self.phases1 = query_phases(cfg, q.m, q.n, s, batch=1)
+        # overhead + per-request prefill run before the resident joins the
+        # decode group (ContinuousBatcher: prefill per-request, decode batched)
+        self.prefill_end = now + self.phases1.t_overhead + self.phases1.t_prefill
+        self.rem_tokens = float(q.n)
+        self._t_tok: Dict[int, Tuple[float, float]] = {}
+
+    def tok_time_util(self, cfg: ModelConfig, s: SystemProfile,
+                      b: int) -> Tuple[float, float]:
+        """(seconds per output token, decode utilization) at occupancy b."""
+        hit = self._t_tok.get(b)
+        if hit is None:
+            ph = query_phases(cfg, self.rec.query.m, self.rec.query.n, s, batch=b)
+            hit = (ph.t_decode / max(1, self.rec.query.n), ph.util_decode)
+            self._t_tok[b] = hit
+        return hit
+
+
+class _Instance:
+    __slots__ = ("pool", "iid", "slots", "residents", "last_t", "version",
+                 "busy_slot_seconds")
+
+    def __init__(self, pool: "_PoolRuntime", iid: int, slots: int):
+        self.pool = pool
+        self.iid = iid
+        self.slots = slots
+        self.residents: List[_Resident] = []
+        self.last_t = 0.0
+        self.version = 0
+        self.busy_slot_seconds = 0.0
+
+    @property
+    def free_slots(self) -> int:
+        return self.slots - len(self.residents)
+
+    def advance(self, cfg: ModelConfig, now: float) -> None:
+        """Progress decode/prefill state from last_t to now.
+
+        Event scheduling guarantees no resident crosses prefill->decode
+        strictly inside the interval: every prefill_end and every admission
+        is itself an event boundary, so the decode batch size b is constant
+        over [last_t, now].
+        """
+        t0, dt = self.last_t, now - self.last_t
+        self.last_t = now
+        if dt <= 0 or not self.residents:
+            return
+        self.busy_slot_seconds += len(self.residents) * dt
+        decoding = [r for r in self.residents if r.prefill_end <= t0 + 1e-12]
+        b = len(decoding)
+        s = self.pool.spec.system
+        for r in decoding:
+            t_tok, util = r.tok_time_util(cfg, s, b)
+            steps = dt / t_tok if t_tok > 0 else r.rem_tokens
+            steps = min(steps, r.rem_tokens)
+            r.rem_tokens -= steps
+            # instance power at this resident's utilization, split across batch
+            r.rec.energy_j += steps * t_tok * s.power(util) / b
+            # snap float dust: a remainder whose decode time is below the
+            # representable time resolution at `now` would schedule an event
+            # that rounds onto `now` and never progresses (livelock)
+            if r.rem_tokens * t_tok <= 4.0 * np.spacing(max(now, 1.0)):
+                r.rem_tokens = 0.0
+        for r in self.residents:
+            if r.prefill_end > t0 + 1e-12:       # in overhead+prefill phase
+                span = min(now, r.prefill_end) - t0
+                if span > 0:
+                    ph = r.phases1
+                    t_total = ph.t_overhead + ph.t_prefill
+                    # blended power over the window: overhead draws idle
+                    # power, prefill draws power at util_prefill — integrates
+                    # to exactly the static per-query prefill+overhead energy
+                    p = (ph.t_overhead * s.power(0.0) + ph.t_prefill
+                         * s.power(ph.util_prefill)) / max(t_total, 1e-12)
+                    r.rec.energy_j += span * p
+
+    def pop_finished(self, now: float) -> List[_Resident]:
+        """Remove and return residents that have emitted all output tokens
+        (a residual microtoken counts as done — its service time and energy
+        are below float resolution at fleet time scales)."""
+        done = [r for r in self.residents
+                if r.rem_tokens <= 1e-6 and r.prefill_end <= now + 1e-12]
+        for r in done:
+            self.residents.remove(r)
+        return done
+
+    def next_event_time(self, cfg: ModelConfig, now: float) -> Optional[float]:
+        """Earliest upcoming prefill-finish or decode completion."""
+        if not self.residents:
+            return None
+        t = float("inf")
+        decoding = [r for r in self.residents if r.prefill_end <= now + 1e-12]
+        b = len(decoding)
+        for r in self.residents:
+            if r.prefill_end > now + 1e-12:
+                t = min(t, r.prefill_end)
+            else:
+                t_tok, _ = r.tok_time_util(cfg, self.pool.spec.system, b)
+                t = min(t, now + r.rem_tokens * t_tok)
+        return t if np.isfinite(t) else None
+
+
+class _PoolRuntime:
+    def __init__(self, name: str, spec: PoolSpec):
+        self.name = name
+        self.spec = spec
+        self.instances = [_Instance(self, i, spec.slots)
+                          for i in range(spec.instances)]
+        # heap of (priority, seq, record, batch=1 service time)
+        self.queue: List[Tuple[float, int, RequestRecord, float]] = []
+        self.queued_service_s = 0.0      # running sum of queued service times
+        self.result = PoolResult()
+
+    def enqueue(self, key: float, seqno: int, rec: RequestRecord,
+                service_s: float) -> None:
+        heapq.heappush(self.queue, (key, seqno, rec, service_s))
+        self.queued_service_s += service_s
+
+    def dequeue(self) -> RequestRecord:
+        _, _, rec, service_s = heapq.heappop(self.queue)
+        self.queued_service_s -= service_s
+        return rec
+
+    def snapshot(self, cfg: ModelConfig, now: float) -> PoolSnapshot:
+        busy = sum(len(i.residents) for i in self.instances)
+        return PoolSnapshot(
+            system=self.spec.system,
+            instances=self.spec.instances,
+            slots_per_instance=self.spec.slots,
+            busy_slots=busy,
+            queue_len=len(self.queue),
+            est_wait_s=self.est_wait(cfg, now),
+        )
+
+    def est_wait(self, cfg: ModelConfig, now: float) -> float:
+        """Estimated queueing delay for a new arrival: time until the next
+        slot frees, plus the queued backlog spread over all slots."""
+        total_slots = self.spec.instances * self.spec.slots
+        free = sum(i.free_slots for i in self.instances)
+        backlog = self.queued_service_s / max(1, total_slots)
+        if free > 0:
+            return backlog
+        nxt = [i.next_event_time(cfg, now) for i in self.instances]
+        nxt = [t for t in nxt if t is not None]
+        next_free = (min(nxt) - now) if nxt else 0.0
+        return max(0.0, next_free) + backlog
+
+
+# ------------------------------------------------------------------- simulator
+class FleetSimulator:
+    """Discrete-event simulation of a heterogeneous pool fleet under an
+    online dispatch policy.
+
+    queue_discipline: 'fifo' (arrival order) or 'sjf' (shortest expected
+    service first — priority queue on the analytic batch=1 runtime).
+    """
+
+    def __init__(self, cfg: ModelConfig, pools: Dict[str, PoolSpec],
+                 scheduler: Scheduler, *, queue_discipline: str = "fifo"):
+        if queue_discipline not in ("fifo", "sjf"):
+            raise ValueError(f"unknown queue discipline {queue_discipline!r}")
+        self.cfg = cfg
+        self.pools = {n: _PoolRuntime(n, spec) for n, spec in pools.items()}
+        self.scheduler = scheduler
+        self.queue_discipline = queue_discipline
+        self._by_system = {spec.system.name: n for n, spec in pools.items()}
+        if len(self._by_system) != len(pools):
+            raise ValueError("pools must use distinct SystemProfile names: "
+                             "dispatch maps a chosen system back to its pool "
+                             "by name")
+        self._ran = False
+
+    # ------------------------------------------------------------------ run
+    def run(self, queries: Sequence[Query],
+            policy_name: Optional[str] = None) -> FleetSimResult:
+        if self._ran:
+            raise RuntimeError("FleetSimulator is single-shot (instances hold "
+                               "clock state); build a new one per run")
+        self._ran = True
+        cfg = self.cfg
+        seq = itertools.count()
+        events: List[Tuple[float, int, int, object]] = []
+        for rid, q in enumerate(sorted(queries, key=lambda q: q.arrival_s)):
+            heapq.heappush(events, (q.arrival_s, next(seq), ARRIVAL, (rid, q)))
+
+        records: List[RequestRecord] = []
+        self._horizon = 0.0
+
+        while events:
+            t, _, kind, payload = heapq.heappop(events)
+            if kind == ARRIVAL:
+                rid, q = payload
+                pool = self._dispatch(q, t)
+                rec = RequestRecord(rid, q, pool.name, t_arrival=t)
+                records.append(rec)
+                pool.result.queries += 1
+                svc = runtime(cfg, q.m, q.n, pool.spec.system)
+                key = svc if self.queue_discipline == "sjf" else t
+                pool.enqueue(key, next(seq), rec, svc)
+                self._refill(pool, t, events, seq)
+            else:                                   # INSTANCE batch-step
+                inst, version = payload
+                if version != inst.version:
+                    continue                        # stale event
+                inst.advance(cfg, t)
+                self._complete(inst, t)
+                self._refill(inst.pool, t, events, seq)
+                self._reschedule(inst, t, events, seq)
+
+        return self._finalize(records, self._horizon,
+                              policy_name or type(self.scheduler).__name__)
+
+    # ------------------------------------------------------------- internals
+    def _fleet_state(self, now: float) -> FleetState:
+        return FleetState(time_s=now,
+                          pools={n: p.snapshot(self.cfg, now)
+                                 for n, p in self.pools.items()})
+
+    def _dispatch(self, q: Query, now: float) -> _PoolRuntime:
+        s = self.scheduler.dispatch(q, self._fleet_state(now))
+        name = self._by_system.get(s.name)
+        if name is None:
+            raise KeyError(f"scheduler dispatched to unknown system {s.name!r}")
+        return self.pools[name]
+
+    def _complete(self, inst: _Instance, now: float) -> None:
+        for r in inst.pop_finished(now):
+            r.rec.t_done = now
+            self._horizon = max(self._horizon, now)
+
+    def _refill(self, pool: _PoolRuntime, now: float, events, seq) -> None:
+        """Admit queued requests into free slots (least-loaded instance)."""
+        while pool.queue:
+            inst = min(pool.instances, key=lambda i: len(i.residents))
+            if inst.free_slots <= 0:
+                break
+            rec = pool.dequeue()
+            inst.advance(self.cfg, now)
+            self._complete(inst, now)
+            res = _Resident(self.cfg, rec, pool.spec.system, now)
+            rec.t_start = now
+            rec.t_decode = res.prefill_end
+            inst.residents.append(res)
+            self._reschedule(inst, now, events, seq)
+
+    def _reschedule(self, inst: _Instance, now: float, events, seq) -> None:
+        inst.version += 1
+        nxt = inst.next_event_time(self.cfg, now)
+        if nxt is not None:
+            heapq.heappush(events, (max(nxt, now), next(seq), INSTANCE,
+                                    (inst, inst.version)))
+
+    def _finalize(self, records, horizon, policy) -> FleetSimResult:
+        per_pool = {}
+        for n, p in self.pools.items():
+            total_slots = p.spec.instances * p.spec.slots
+            busy = sum(i.busy_slot_seconds for i in p.instances)
+            p.result.busy_slot_seconds = busy
+            p.result.energy_j = sum(r.energy_j for r in records if r.pool == n)
+            if horizon > 0:
+                p.result.utilization = busy / (total_slots * horizon)
+                idle_slot_s = total_slots * horizon - busy
+                # allocated-idle power per slot: instance idle power / slots
+                p.result.idle_energy_j = (idle_slot_s *
+                                          p.spec.system.power(0.0) / p.spec.slots)
+            per_pool[n] = p.result
+        return FleetSimResult(policy, records, per_pool, horizon)
+
+
+def simulate_fleet(cfg: ModelConfig, queries: Sequence[Query],
+                   pools: Dict[str, PoolSpec], scheduler: Scheduler, *,
+                   queue_discipline: str = "fifo",
+                   policy_name: Optional[str] = None) -> FleetSimResult:
+    """One-call wrapper: build a FleetSimulator and run the workload."""
+    return FleetSimulator(cfg, pools, scheduler,
+                          queue_discipline=queue_discipline
+                          ).run(queries, policy_name)

@@ -8,6 +8,16 @@
     queueing: the cost of a pool includes the wait until an instance frees up,
     so bursts spill to the other pool instead of queueing indefinitely.
   * Baselines — workload-unaware policies the paper compares against.
+
+Every scheduler exposes a uniform online API used by the discrete-event
+fleet simulator (``core/fleet.py``) and the serving router:
+
+    dispatch(query, fleet_state) -> SystemProfile
+
+``fleet_state`` is a ``FleetState`` snapshot (per-pool queue depths, busy
+instances, estimated wait). Workload-only policies ignore it; queue-aware
+policies price the wait in. The legacy offline ``assign(queries)`` path is
+kept for the paper's static Section 6 accounting.
 """
 from __future__ import annotations
 
@@ -32,8 +42,43 @@ class Assignment:
     wait_s: float = 0.0
 
 
+# ----------------------------------------------------------------- fleet state
+@dataclass
+class PoolSnapshot:
+    """Observable state of one pool at dispatch time."""
+    system: SystemProfile
+    instances: int = 1
+    slots_per_instance: int = 1
+    busy_slots: int = 0
+    queue_len: int = 0
+    est_wait_s: float = 0.0      # estimated queueing delay for a new arrival
+
+    @property
+    def total_slots(self) -> int:
+        return self.instances * self.slots_per_instance
+
+    @property
+    def free_slots(self) -> int:
+        return max(0, self.total_slots - self.busy_slots)
+
+
+@dataclass
+class FleetState:
+    """Snapshot handed to ``Scheduler.dispatch`` by the fleet simulator or
+    the serving router. Maps pool/system name -> PoolSnapshot."""
+    time_s: float = 0.0
+    pools: Dict[str, PoolSnapshot] = field(default_factory=dict)
+
+    def for_system(self, s: SystemProfile) -> Optional[PoolSnapshot]:
+        for p in self.pools.values():
+            if p.system.name == s.name:
+                return p
+        return None
+
+
 class Scheduler:
-    """Assigns each query to a system. Subclasses override ``choose``."""
+    """Assigns each query to a system. Subclasses override ``choose``
+    (workload-only decision) and optionally ``dispatch`` (queue-aware)."""
 
     def __init__(self, cfg: ModelConfig, systems: Sequence[SystemProfile],
                  cp: CostParams = CostParams()):
@@ -43,6 +88,11 @@ class Scheduler:
 
     def choose(self, q: Query) -> SystemProfile:
         raise NotImplementedError
+
+    def dispatch(self, q: Query, fleet: Optional[FleetState] = None) -> SystemProfile:
+        """Online dispatch under identical queueing dynamics for every policy.
+        Default: the workload-only ``choose`` rule, ignoring fleet state."""
+        return self.choose(q)
 
     def assign(self, queries: Sequence[Query]) -> List[Assignment]:
         out = []
@@ -120,6 +170,22 @@ class CapacityAwareScheduler(Scheduler):
     def choose(self, q: Query) -> SystemProfile:
         """Online single-query dispatch (stateful: reserves the instance)."""
         return self._assign_one(q).system
+
+    def dispatch(self, q: Query, fleet: Optional[FleetState] = None) -> SystemProfile:
+        """Queue-aware dispatch: price each pool's *observed* estimated wait
+        (from the fleet snapshot) into the Eq. 1 cost. Falls back to the
+        internal reservation heap when no snapshot is provided."""
+        if fleet is None:
+            return self.choose(q)
+        best, best_c = None, float("inf")
+        for s in self.systems:
+            snap = fleet.for_system(s)
+            wait = snap.est_wait_s if snap is not None else 0.0
+            c = (cost(self.cfg, q.m, q.n, s, self.cp)
+                 + (1 - self.cp.lam) * wait / self.cp.r_norm)
+            if c < best_c:
+                best, best_c = s, c
+        return best
 
     def assign(self, queries: Sequence[Query]) -> List[Assignment]:
         return [self._assign_one(q)

@@ -82,8 +82,8 @@ def threshold_sweep(cfg: ModelConfig, queries: Sequence[Query],
     """
     if not thresholds:
         hi = 512 if axis == "out" else 2048   # M1 capped at 512 output tokens
-        thresholds = [1, 2, 4, 8, 16, 32, 64, 128, 256] + (
-            [512] if axis == "out" else [512, 1024, 2048])
+        thresholds = [t for t in (1, 2, 4, 8, 16, 32, 64, 128, 256, 512,
+                                  1024, 2048) if t <= hi]
     if paper_faithful:
         queries = [Query(q.m, 32, q.arrival_s) if axis == "in"
                    else Query(32, q.n, q.arrival_s) for q in queries]

@@ -1,4 +1,5 @@
-"""Workload generation: Alpaca-like token-length distributions (paper Fig 3).
+"""Workload generation: Alpaca-like token-length distributions (paper Fig 3)
+plus arrival processes for the discrete-event fleet simulator.
 
 The paper uses the 52K-prompt Alpaca dataset's input/output token histograms
 as the representative workload. Alpaca's measured moments: median input
@@ -6,6 +7,14 @@ as the representative workload. Alpaca's measured moments: median input
 ~60-70 with a tail to ~600. We model both as clipped log-normals with those
 moments; the distribution object also accepts arbitrary empirical histograms
 so a real trace can be dropped in.
+
+Arrival processes (all deterministic under a fixed seed):
+  * poisson_arrivals   — homogeneous Poisson at rate_qps.
+  * diurnal_arrivals   — nonhomogeneous Poisson with a sinusoidal rate
+                         (day/night traffic), sampled by Lewis-Shedler thinning.
+  * mmpp_arrivals      — 2-state Markov-modulated Poisson (bursty traffic:
+                         calm/burst phases with exponential dwell times).
+  * trace_arrivals     — empirical trace replay (arbitrary timestamp list).
 """
 from __future__ import annotations
 
@@ -33,14 +42,118 @@ class WorkloadSpec:
     rate_qps: float = 2.0    # arrival rate for capacity-aware scheduling
 
 
+# ----------------------------------------------------------- arrival processes
+def poisson_arrivals(n_queries: int, rate_qps: float, seed: int = 0) -> np.ndarray:
+    """Homogeneous Poisson: iid exponential inter-arrival times."""
+    rng = np.random.default_rng(seed)
+    return np.cumsum(rng.exponential(1.0 / rate_qps, n_queries))
+
+
+def diurnal_arrivals(n_queries: int, rate_qps: float, seed: int = 0, *,
+                     amplitude: float = 0.8,
+                     period_s: float = 86_400.0,
+                     phase: float = 0.0) -> np.ndarray:
+    """Nonhomogeneous Poisson with rate(t) = rate_qps*(1 + amplitude*sin(...)).
+
+    Lewis-Shedler thinning against the peak rate; amplitude in [0, 1) keeps
+    the instantaneous rate positive. Mean rate over a full period is rate_qps.
+    """
+    if not 0.0 <= amplitude < 1.0:
+        raise ValueError(f"amplitude must be in [0, 1), got {amplitude}")
+    rng = np.random.default_rng(seed)
+    lam_max = rate_qps * (1.0 + amplitude)
+    out = np.empty(n_queries)
+    t, i = 0.0, 0
+    while i < n_queries:
+        t += rng.exponential(1.0 / lam_max)
+        lam_t = rate_qps * (1.0 + amplitude * np.sin(2 * np.pi * t / period_s + phase))
+        if rng.uniform() * lam_max <= lam_t:
+            out[i] = t
+            i += 1
+    return out
+
+
+def mmpp_arrivals(n_queries: int, rate_qps: float, seed: int = 0, *,
+                  burst_factor: float = 8.0,
+                  burst_fraction: float = 0.1,
+                  mean_dwell_s: float = 30.0) -> np.ndarray:
+    """2-state MMPP: a calm state and a burst state at burst_factor x the calm
+    rate. burst_fraction is the long-run fraction of time in the burst state;
+    rates are chosen so the long-run mean arrival rate equals rate_qps.
+    Dwell times are exponential with mean mean_dwell_s in each state (scaled
+    by occupancy so the stationary split matches burst_fraction).
+    """
+    rng = np.random.default_rng(seed)
+    # stationary: pi_burst = burst_fraction. Mean rate = pi_c*lam_c + pi_b*lam_b.
+    lam_calm = rate_qps / (1.0 - burst_fraction + burst_fraction * burst_factor)
+    lam_burst = burst_factor * lam_calm
+    dwell = {0: mean_dwell_s * 2 * (1.0 - burst_fraction),
+             1: mean_dwell_s * 2 * burst_fraction}
+    rates = {0: lam_calm, 1: lam_burst}
+    out = np.empty(n_queries)
+    t, i, state = 0.0, 0, 0
+    t_switch = rng.exponential(dwell[state])
+    while i < n_queries:
+        dt = rng.exponential(1.0 / rates[state])
+        if t + dt >= t_switch:          # state flips before next arrival
+            t = t_switch
+            state = 1 - state
+            t_switch = t + rng.exponential(dwell[state])
+            continue                     # memoryless: redraw in the new state
+        t += dt
+        out[i] = t
+        i += 1
+    return out
+
+
+def trace_arrivals(times: Sequence[float]) -> np.ndarray:
+    """Empirical trace replay: validates and sorts a list of timestamps."""
+    arr = np.asarray(times, dtype=float)
+    if arr.ndim != 1:
+        raise ValueError("trace must be a 1-D sequence of timestamps")
+    if np.any(arr < 0):
+        raise ValueError("trace timestamps must be non-negative")
+    return np.sort(arr)
+
+
+ARRIVAL_PROCESSES = ("poisson", "diurnal", "mmpp", "trace")
+
+
+def generate_arrivals(n_queries: int, rate_qps: float, seed: int = 0, *,
+                      process: str = "poisson",
+                      trace: Optional[Sequence[float]] = None,
+                      **kwargs) -> np.ndarray:
+    """Dispatch to one of the named arrival processes."""
+    if process == "poisson":
+        return poisson_arrivals(n_queries, rate_qps, seed, **kwargs)
+    if process == "diurnal":
+        return diurnal_arrivals(n_queries, rate_qps, seed, **kwargs)
+    if process == "mmpp":
+        return mmpp_arrivals(n_queries, rate_qps, seed, **kwargs)
+    if process == "trace":
+        if trace is None:
+            raise ValueError("process='trace' requires a trace= timestamp list")
+        arr = trace_arrivals(trace)
+        if len(arr) < n_queries:
+            raise ValueError(f"trace has {len(arr)} stamps < {n_queries} queries")
+        return arr[:n_queries]
+    raise ValueError(f"unknown arrival process {process!r}; "
+                     f"choose from {ARRIVAL_PROCESSES}")
+
+
 def sample_workload(n_queries: int, seed: int = 0,
-                    spec: WorkloadSpec = WorkloadSpec()) -> list[Query]:
+                    spec: WorkloadSpec = WorkloadSpec(), *,
+                    arrival_process: str = "poisson",
+                    trace: Optional[Sequence[float]] = None,
+                    **arrival_kwargs) -> list[Query]:
     rng = np.random.default_rng(seed)
     m = np.clip(np.round(rng.lognormal(spec.mu_in, spec.sigma_in, n_queries)),
                 1, spec.max_in).astype(int)
     n = np.clip(np.round(rng.lognormal(spec.mu_out, spec.sigma_out, n_queries)),
                 1, spec.max_out).astype(int)
-    arrivals = np.cumsum(rng.exponential(1.0 / spec.rate_qps, n_queries))
+    arrivals = generate_arrivals(n_queries, spec.rate_qps, seed + 1,
+                                 process=arrival_process, trace=trace,
+                                 **arrival_kwargs)
     return [Query(int(mi), int(ni), float(a)) for mi, ni, a in zip(m, n, arrivals)]
 
 

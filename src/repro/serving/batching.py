@@ -31,6 +31,7 @@ class Request:
     max_new_tokens: int
     out_tokens: List[int] = field(default_factory=list)
     done: bool = False
+    eos_id: Optional[int] = None    # stop early when this token is emitted
 
 
 class ContinuousBatcher:
@@ -51,6 +52,19 @@ class ContinuousBatcher:
     def busy(self) -> bool:
         return bool(self.queue) or any(r is not None for r in self.active)
 
+    def _finished(self, req: Request) -> bool:
+        """EOS-aware completion: a request retires when it emits its eos_id
+        or exhausts its token budget, whichever comes first."""
+        if req.eos_id is not None and req.out_tokens and \
+                req.out_tokens[-1] == req.eos_id:
+            return True
+        return len(req.out_tokens) >= req.max_new_tokens
+
+    def _retire(self, i: int) -> None:
+        self.active[i].done = True
+        self.active[i] = None
+        self.cache = _clear_lane(self.cache, i)
+
     def _fill_slots(self) -> None:
         for i in range(self.slots):
             if self.active[i] is None and self.queue:
@@ -68,6 +82,8 @@ class ContinuousBatcher:
                 req.out_tokens.append(tok)
                 self._last_tok = self._last_tok.at[i].set(tok)
                 self.cache = _splice_lane(self.cache, lane_cache, i)
+                if self._finished(req):       # eos on the very first token
+                    self._retire(i)
 
     def step(self) -> None:
         """One scheduler tick: refill empty lanes, one batched decode step."""
@@ -81,10 +97,8 @@ class ContinuousBatcher:
             req = self.active[i]
             req.out_tokens.append(int(toks[i]))
             self._last_tok = self._last_tok.at[i].set(int(toks[i]))
-            if len(req.out_tokens) >= req.max_new_tokens:
-                req.done = True
-                self.active[i] = None
-                self.cache = _clear_lane(self.cache, i)
+            if self._finished(req):
+                self._retire(i)
 
     def run(self, max_ticks: int = 10_000) -> None:
         ticks = 0
@@ -94,17 +108,27 @@ class ContinuousBatcher:
 
 
 # --------------------------------------------------------------------- lane ops
+# Cache keys whose leading axis is the batch (everything else produced by
+# M.init_cache is layer-leading with batch at axis 1). Explicit metadata, not
+# a shape heuristic: comparing v.shape[0] == lv.shape[0] misclassifies
+# batch-leading tensors whenever slots == 1 (or slots == n_layers), silently
+# corrupting the spliced cache.
+_BATCH_LEADING_KEYS = frozenset({"pos"})
+
+
+def _batch_axis(key: str, v) -> int:
+    return 0 if key in _BATCH_LEADING_KEYS or v.ndim == 1 else 1
+
+
 def _splice_lane(cache: Dict, lane: Dict, i: int) -> Dict:
     """Copy single-lane cache (batch dim 1) into batch position i."""
     out = dict(cache)
     for k, v in cache.items():
         lv = lane[k]
-        if k == "pos":
+        if _batch_axis(k, v) == 0:
             out[k] = v.at[i].set(lv[0])
-        elif v.ndim >= 2 and v.shape[0] == lv.shape[0]:   # leading layer dim
-            out[k] = v.at[:, i].set(lv[:, 0])
         else:
-            out[k] = v.at[i].set(lv[0])
+            out[k] = v.at[:, i].set(lv[:, 0])
     return out
 
 

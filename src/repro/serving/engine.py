@@ -57,7 +57,14 @@ class InferenceEngine:
     def generate(self, batch: Dict[str, jnp.ndarray], max_new_tokens: int = 32,
                  *, temperature: float = 0.0, key=None,
                  eos_id: Optional[int] = None) -> GenerationResult:
-        """Greedy (or sampled) generation. All requests share prompt length."""
+        """Greedy (or sampled) generation. All requests share prompt length.
+
+        With temperature > 0 and no explicit key, a fixed seeded PRNGKey is
+        used so sampled generation is reproducible by default (previously
+        key=None crashed inside jax.random.fold_in).
+        """
+        if temperature > 0.0 and key is None:
+            key = jax.random.PRNGKey(0)
         B, S = batch["tokens"].shape
         logits, cache = self.prefill(batch)
         out = []

@@ -2,11 +2,17 @@
 
 A fleet is a set of *pools*; each pool is (SystemProfile, engine-or-batcher,
 instance count). Incoming requests carry (m, expected_n); the router prices
-them with the core cost model and dispatches per the configured policy
-(threshold / cost-optimal / capacity-aware). Execution on this CPU container
-is functional (every pool runs the same JAX engine); energy/runtime are
-accounted analytically per the assigned pool's profile — exactly the
-quantity the paper optimizes.
+them with the core cost model and dispatches through the same uniform
+``Scheduler.dispatch(query, fleet_state)`` API the discrete-event fleet
+simulator uses — so a policy validated in simulation drops into serving
+unchanged. Execution on this CPU container is functional (every pool runs
+the same JAX engine); energy/runtime are accounted analytically per the
+assigned pool's profile — exactly the quantity the paper optimizes.
+
+Execution backends per pool:
+  * engine  — immediate, blocking ``generate`` per request;
+  * batcher — a ``ContinuousBatcher`` (vLLM-style slots, EOS-aware): requests
+    queue, ``drain()`` runs all pools' decode loops to completion.
 """
 from __future__ import annotations
 
@@ -20,9 +26,11 @@ from repro.core.cost import CostParams
 from repro.core.energy import energy
 from repro.core.perf_model import runtime
 from repro.core.scheduler import (CapacityAwareScheduler, CostOptimalScheduler,
-                                  Scheduler, ThresholdScheduler)
+                                  FleetState, PoolSnapshot, Scheduler,
+                                  ThresholdScheduler)
 from repro.core.systems import SystemProfile
 from repro.core.workload import Query
+from repro.serving.batching import ContinuousBatcher, Request
 from repro.serving.engine import InferenceEngine
 
 
@@ -41,6 +49,7 @@ class RoutedRequest:
     energy_j: float
     runtime_s: float
     output: Optional[np.ndarray] = None
+    request: Optional[Request] = None     # set when executed via a batcher
 
 
 class FleetRouter:
@@ -52,6 +61,8 @@ class FleetRouter:
         self.cfg = cfg
         self.pools = pools
         self.engines = engines or {}
+        self.batchers: Dict[str, ContinuousBatcher] = {}
+        self.counts = counts or {s.name: 1 for s in pools.values()}
         self.stats = {name: PoolStats() for name in pools}
         systems = list(pools.values())
         cp = CostParams(lam=lam)
@@ -63,19 +74,57 @@ class FleetRouter:
         elif policy == "cost_optimal":
             self.scheduler = CostOptimalScheduler(cfg, systems, cp)
         elif policy == "capacity_aware":
-            self.scheduler = CapacityAwareScheduler(
-                cfg, systems, counts or {s.name: 1 for s in systems}, cp)
+            self.scheduler = CapacityAwareScheduler(cfg, systems, self.counts, cp)
         else:
             raise ValueError(policy)
-        self._name_of = {id(s): n for n, s in pools.items()}
+        self._name_of = {s.name: n for n, s in pools.items()}
+        if len(self._name_of) != len(pools):
+            raise ValueError("pools must use distinct SystemProfile names: "
+                             "dispatch maps a chosen system back to its pool "
+                             "by name")
         self._rid = 0
 
+    # ------------------------------------------------------------- batchers
+    def attach_batchers(self, slots: int = 4) -> None:
+        """Give every engine-backed pool a continuous-batching backend."""
+        for name, eng in self.engines.items():
+            self.batchers[name] = ContinuousBatcher(eng, slots=slots)
+
+    def _fleet_state(self, now: float = 0.0) -> FleetState:
+        """Observable per-pool queue state for the dispatch API. Pools run a
+        single batcher instance here; est_wait is the queued backlog spread
+        over its slots (decode-time estimate at batch=1)."""
+        snaps = {}
+        for name, sysp in self.pools.items():
+            cb = self.batchers.get(name)
+            busy = queue_len = 0
+            slots = cb.slots if cb is not None else 1
+            est_wait = 0.0
+            if cb is not None:
+                busy = sum(1 for r in cb.active if r is not None)
+                queue_len = len(cb.queue)
+                backlog = sum(runtime(self.cfg, len(r.tokens), r.max_new_tokens,
+                                      sysp) for r in cb.queue)
+                est_wait = backlog / max(1, slots)
+            snaps[name] = PoolSnapshot(
+                system=sysp, instances=self.counts.get(sysp.name, 1),
+                slots_per_instance=slots, busy_slots=busy,
+                queue_len=queue_len, est_wait_s=est_wait)
+        return FleetState(time_s=now, pools=snaps)
+
+    # --------------------------------------------------------------- routing
     def route(self, m: int, expected_n: int, arrival_s: float = 0.0) -> str:
         """Pick a pool for an (m, n) request; update accounting."""
         q = Query(m, expected_n, arrival_s)
-        sys = self.scheduler.choose(q) if hasattr(self.scheduler, "choose") else \
-            self.scheduler.assign([q])[0].system
-        name = self._name_of[id(sys)]
+        # Build the snapshot only when the policy actually reads it: without
+        # an execution backend there is no observable queue state (stateful
+        # policies then fall back to their reservation model), and policies
+        # using the base workload-only dispatch never look at it.
+        fleet = None
+        if self.batchers and type(self.scheduler).dispatch is not Scheduler.dispatch:
+            fleet = self._fleet_state(arrival_s)
+        sys = self.scheduler.dispatch(q, fleet)
+        name = self._name_of[sys.name]
         st = self.stats[name]
         st.queries += 1
         st.energy_j += energy(self.cfg, m, expected_n, sys)
@@ -84,21 +133,37 @@ class FleetRouter:
         return name
 
     def submit(self, tokens: np.ndarray, max_new_tokens: int,
-               arrival_s: float = 0.0) -> RoutedRequest:
-        """Route AND execute (if an engine is attached to the pool)."""
+               arrival_s: float = 0.0,
+               eos_id: Optional[int] = None) -> RoutedRequest:
+        """Route AND execute.
+
+        If the pool has an attached ContinuousBatcher the request is queued
+        (EOS-aware; call ``drain()`` to run the decode loops). Otherwise, if
+        an engine is attached, it generates immediately.
+        """
         self._rid += 1
         name = self.route(len(tokens), max_new_tokens, arrival_s)
-        out = None
-        if name in self.engines:
+        out, req = None, None
+        if name in self.batchers:
+            req = Request(self._rid, np.asarray(tokens), max_new_tokens,
+                          eos_id=eos_id)
+            self.batchers[name].submit(req)
+        elif name in self.engines:
             import jax.numpy as jnp
             res = self.engines[name].generate(
-                {"tokens": jnp.asarray(tokens, jnp.int32)[None]}, max_new_tokens)
+                {"tokens": jnp.asarray(tokens, jnp.int32)[None]}, max_new_tokens,
+                eos_id=eos_id)
             out = res.tokens[0]
         sysp = self.pools[name]
         return RoutedRequest(self._rid, name,
                              energy(self.cfg, len(tokens), max_new_tokens, sysp),
                              runtime(self.cfg, len(tokens), max_new_tokens, sysp),
-                             out)
+                             out, req)
+
+    def drain(self, max_ticks: int = 10_000) -> None:
+        """Run every pool's continuous-batching loop until all requests done."""
+        for cb in self.batchers.values():
+            cb.run(max_ticks)
 
     def fleet_report(self) -> Dict[str, Dict]:
         return {n: vars(s) for n, s in self.stats.items()}

@@ -1,0 +1,219 @@
+"""Discrete-event fleet simulator: determinism, the zero-load reduction to
+static accounting, queueing/batching dynamics, arrival processes, and the
+dispatch-API contract shared by all schedulers."""
+import numpy as np
+import pytest
+
+from repro.configs import get_config
+from repro.core import (CapacityAwareScheduler, CostOptimalScheduler,
+                        FleetSimulator, FleetState, PoolSpec, Query,
+                        RoundRobinScheduler, SingleSystemScheduler,
+                        ThresholdScheduler, WorkloadSpec, diurnal_arrivals,
+                        energy, generate_arrivals, mmpp_arrivals, paper_fleet,
+                        poisson_arrivals, runtime, sample_workload, simulate,
+                        simulate_fleet, threshold_sweep, trace_arrivals)
+from repro.core.cost import normalized_cost_params
+
+CFG = get_config("deepseek-7b")
+EFF, PERF = paper_fleet()
+
+
+# ---------------------------------------------------------- arrival processes
+@pytest.mark.parametrize("process", ["poisson", "diurnal", "mmpp"])
+def test_arrivals_sorted_positive_deterministic(process):
+    a1 = generate_arrivals(200, 2.0, seed=3, process=process)
+    a2 = generate_arrivals(200, 2.0, seed=3, process=process)
+    np.testing.assert_array_equal(a1, a2)          # deterministic under seed
+    assert len(a1) == 200
+    assert np.all(a1 > 0)
+    assert np.all(np.diff(a1) >= 0)                # nondecreasing
+    a3 = generate_arrivals(200, 2.0, seed=4, process=process)
+    assert not np.array_equal(a1, a3)              # seed actually matters
+
+
+@pytest.mark.parametrize("process", ["poisson", "diurnal", "mmpp"])
+def test_arrivals_mean_rate(process):
+    a = generate_arrivals(5000, 4.0, seed=0, process=process)
+    rate = len(a) / a[-1]
+    assert 0.7 * 4.0 <= rate <= 1.4 * 4.0          # long-run mean ~ rate_qps
+
+
+def test_mmpp_is_burstier_than_poisson():
+    """MMPP inter-arrival coefficient of variation must exceed Poisson's ~1."""
+    gaps_p = np.diff(poisson_arrivals(5000, 2.0, seed=1))
+    gaps_m = np.diff(mmpp_arrivals(5000, 2.0, seed=1))
+    cv = lambda g: np.std(g) / np.mean(g)
+    assert cv(gaps_m) > cv(gaps_p) * 1.2
+
+
+def test_diurnal_amplitude_validation():
+    with pytest.raises(ValueError):
+        diurnal_arrivals(10, 1.0, amplitude=1.5)
+
+
+def test_trace_replay():
+    a = trace_arrivals([3.0, 1.0, 2.0])
+    np.testing.assert_array_equal(a, [1.0, 2.0, 3.0])
+    with pytest.raises(ValueError):
+        trace_arrivals([-1.0, 2.0])
+    with pytest.raises(ValueError):
+        generate_arrivals(5, 1.0, process="trace", trace=[1.0, 2.0])
+    with pytest.raises(ValueError):
+        generate_arrivals(5, 1.0, process="nope")
+
+
+def test_sample_workload_arrival_process_plumbs_through():
+    qs = sample_workload(50, seed=0, spec=WorkloadSpec(rate_qps=2.0),
+                        arrival_process="mmpp")
+    assert len(qs) == 50
+    assert all(q.arrival_s >= 0 for q in qs)
+
+
+# --------------------------------------------------------------- fleet sim
+def _pools(n_eff=2, n_perf=2, slots_eff=1, slots_perf=1):
+    return {"eff": PoolSpec(EFF, n_eff, slots_eff),
+            "perf": PoolSpec(PERF, n_perf, slots_perf)}
+
+
+def test_zero_load_reduces_to_static_simulate():
+    """Infinite capacity + negligible rate: event-driven totals == static
+    per-query accounting (the acceptance bar: relative error < 1e-6)."""
+    qs = sample_workload(40, seed=3, spec=WorkloadSpec(rate_qps=1e-3))
+    sched = ThresholdScheduler(CFG, EFF, PERF, t_in=32)
+    static = simulate(CFG, qs, sched)
+    res = simulate_fleet(CFG, qs, _pools(len(qs), len(qs)), sched)
+    rel = abs(res.total_energy_j - static.total_energy_j) / static.total_energy_j
+    assert rel < 1e-6
+    # per-request service time equals the static runtime too
+    assert sum(r.service_s for r in res.records) == pytest.approx(
+        static.total_runtime_s, rel=1e-6)
+    assert res.mean_wait_s == 0.0
+
+
+def test_fleet_sim_deterministic():
+    qs = sample_workload(120, seed=7, spec=WorkloadSpec(rate_qps=3.0),
+                        arrival_process="mmpp")
+    r1 = simulate_fleet(CFG, qs, _pools(2, 1, 2, 4),
+                        ThresholdScheduler(CFG, EFF, PERF, t_in=32))
+    r2 = simulate_fleet(CFG, qs, _pools(2, 1, 2, 4),
+                        ThresholdScheduler(CFG, EFF, PERF, t_in=32))
+    assert r1.total_energy_j == r2.total_energy_j
+    assert r1.p99_latency_s == r2.p99_latency_s
+    assert [r.t_done for r in r1.records] == [r.t_done for r in r2.records]
+
+
+def test_every_request_completes_and_invariants_hold():
+    qs = sample_workload(100, seed=5, spec=WorkloadSpec(rate_qps=5.0),
+                        arrival_process="mmpp")
+    res = simulate_fleet(CFG, qs, _pools(2, 1, 2, 2),
+                        CostOptimalScheduler(CFG, [EFF, PERF]))
+    assert len(res.records) == len(qs)
+    for r in res.records:
+        assert r.t_done > r.t_start >= r.t_arrival
+        assert r.wait_s >= 0 and r.energy_j > 0
+    for p in res.per_pool.values():
+        assert 0.0 <= p.utilization <= 1.0
+    assert res.fleet_energy_j >= res.total_energy_j
+
+
+def test_finite_capacity_creates_queueing():
+    """A tight fleet under load must show nonzero waits; an ample fleet with
+    the same workload must not."""
+    qs = sample_workload(60, seed=2, spec=WorkloadSpec(rate_qps=8.0))
+    sched = SingleSystemScheduler(CFG, PERF)
+    tight = simulate_fleet(CFG, qs, {"perf": PoolSpec(PERF, 1, 1)}, sched)
+    ample = simulate_fleet(CFG, qs, {"perf": PoolSpec(PERF, 60, 1)}, sched)
+    assert tight.mean_wait_s > 0
+    assert ample.mean_wait_s == 0
+    assert tight.p99_latency_s > ample.p99_latency_s
+
+
+def test_batching_shares_decode_and_raises_throughput():
+    """More slots per instance = decode weight-streaming amortized across
+    co-resident requests: same instance count must finish sooner."""
+    qs = sample_workload(60, seed=9, spec=WorkloadSpec(rate_qps=6.0))
+    sched = SingleSystemScheduler(CFG, PERF)
+    solo = simulate_fleet(CFG, qs, {"perf": PoolSpec(PERF, 1, 1)}, sched)
+    batched = simulate_fleet(CFG, qs, {"perf": PoolSpec(PERF, 1, 8)}, sched)
+    assert batched.horizon_s < solo.horizon_s
+    assert batched.p99_latency_s < solo.p99_latency_s
+
+
+def test_sjf_priority_queue_beats_fifo_on_median_wait():
+    spec = WorkloadSpec(rate_qps=6.0)
+    qs = sample_workload(80, seed=11, spec=spec)
+    sched = SingleSystemScheduler(CFG, PERF)
+    pools = {"perf": PoolSpec(PERF, 1, 1)}
+    fifo = simulate_fleet(CFG, qs, pools, sched, queue_discipline="fifo")
+    sjf = simulate_fleet(CFG, qs, pools, sched, queue_discipline="sjf")
+    assert sjf.latency_percentile(50) <= fifo.latency_percentile(50)
+    with pytest.raises(ValueError):
+        FleetSimulator(CFG, pools, sched, queue_discipline="lifo")
+
+
+def test_dispatch_api_uniform_across_policies():
+    """Every scheduler must dispatch through the same online API."""
+    cp = normalized_cost_params(CFG, PERF, lam=0.5)
+    schedulers = [
+        ThresholdScheduler(CFG, EFF, PERF, t_in=32),
+        CostOptimalScheduler(CFG, [EFF, PERF]),
+        CapacityAwareScheduler(CFG, [EFF, PERF],
+                               {EFF.name: 2, PERF.name: 1}, cp),
+        RoundRobinScheduler(CFG, [EFF, PERF]),
+        SingleSystemScheduler(CFG, PERF),
+    ]
+    qs = sample_workload(30, seed=1, spec=WorkloadSpec(rate_qps=4.0))
+    for sched in schedulers:
+        res = simulate_fleet(CFG, qs, _pools(2, 2), sched)
+        assert len(res.records) == len(qs)
+        assert all(r.pool in ("eff", "perf") for r in res.records)
+
+
+def test_capacity_aware_beats_threshold_under_burst():
+    """Acceptance: under bursty MMPP arrivals the queue-aware policy wins
+    p99 latency at equal-or-lower fleet energy (idle-inclusive)."""
+    qs = sample_workload(150, seed=7, spec=WorkloadSpec(rate_qps=3.0),
+                        arrival_process="mmpp")
+    pools = {"eff": PoolSpec(EFF, 4, 2), "perf": PoolSpec(PERF, 2, 4)}
+    cp = normalized_cost_params(CFG, PERF, lam=0.9)
+    thr = simulate_fleet(CFG, qs, pools,
+                         ThresholdScheduler(CFG, EFF, PERF, t_in=32))
+    cap = simulate_fleet(CFG, qs, pools,
+                         CapacityAwareScheduler(CFG, [EFF, PERF],
+                                                {EFF.name: 4, PERF.name: 2}, cp))
+    assert cap.p99_latency_s < thr.p99_latency_s
+    assert cap.fleet_energy_j <= thr.fleet_energy_j
+
+
+def test_capacity_aware_dispatch_reads_fleet_state():
+    """dispatch() must react to observed queue pressure: with the eff pool
+    backed up, a query that would statically go eff spills to perf."""
+    from repro.core import PoolSnapshot
+    cp = normalized_cost_params(CFG, PERF, lam=0.0)   # pure latency
+    sched = CapacityAwareScheduler(CFG, [EFF, PERF],
+                                   {EFF.name: 1, PERF.name: 1}, cp)
+    q = Query(8, 8)
+    idle_choice = sched.dispatch(q, FleetState(pools={
+        "eff": PoolSnapshot(system=EFF, est_wait_s=0.0),
+        "perf": PoolSnapshot(system=PERF, est_wait_s=0.0)}))
+    # small query, no queues: the faster system wins under pure latency
+    fast = min((EFF, PERF), key=lambda s: runtime(CFG, q.m, q.n, s))
+    assert idle_choice.name == fast.name
+    # back up only the fast pool: the query must spill to the other one
+    one_sided = FleetState(pools={
+        fast.name: PoolSnapshot(system=fast, est_wait_s=1e4, queue_len=50),
+        (PERF if fast is EFF else EFF).name: PoolSnapshot(
+            system=PERF if fast is EFF else EFF, est_wait_s=0.0)})
+    spilled = sched.dispatch(q, one_sided)
+    assert spilled.name != fast.name
+
+
+# ------------------------------------------------------- satellite regressions
+def test_threshold_sweep_out_axis_default_caps_at_512():
+    """The docstring's 512-token M1 output cap must actually bound the
+    default threshold list on axis='out' (the dead-`hi` fix)."""
+    qs = [Query(16, 700), Query(32, 40)]
+    sweep = threshold_sweep(CFG, qs, EFF, PERF, axis="out")
+    assert max(p.threshold for p in sweep) == 512
+    sweep_in = threshold_sweep(CFG, qs, EFF, PERF, axis="in")
+    assert max(p.threshold for p in sweep_in) == 2048

@@ -1,13 +1,22 @@
 """MoE layer: dispatch correctness vs a dense loop oracle, dropless guarantee,
-load-balance loss properties."""
+load-balance loss properties.
+
+The aux-loss property test runs under hypothesis when installed; otherwise it
+falls back to deterministic parametrized (seed, T) cases over the same ranges
+(a hard ``import hypothesis`` previously killed tier-1 collection)."""
 import dataclasses
 
-import hypothesis.strategies as st
 import jax
 import jax.numpy as jnp
 import numpy as np
 import pytest
-from hypothesis import given, settings
+
+try:  # optional dependency — guarded so collection never fails
+    import hypothesis.strategies as st
+    from hypothesis import given, settings
+    HAVE_HYPOTHESIS = True
+except ModuleNotFoundError:
+    HAVE_HYPOTHESIS = False
 
 from repro.configs import get_config
 from repro.models import moe as MOE
@@ -72,9 +81,7 @@ def test_capacity_drops_zero_not_garbage():
     assert float(jnp.linalg.norm(y)) <= float(jnp.linalg.norm(y_free)) * 1.5
 
 
-@given(st.integers(min_value=1, max_value=6), st.integers(min_value=2, max_value=16))
-@settings(max_examples=10, deadline=None)
-def test_aux_loss_bounds(seed, T):
+def check_aux_loss_bounds(seed, T):
     """Switch aux loss: >= coef (perfect balance) and <= coef * E."""
     cfg = get_config("phi3.5-moe-42b-a6.6b").reduced()
     params = MOE.moe_init(jax.random.PRNGKey(seed), cfg, jnp.float32)
@@ -83,6 +90,19 @@ def test_aux_loss_bounds(seed, T):
     E = cfg.moe.num_experts
     coef = cfg.moe.router_aux_loss_coef
     assert 0.0 < float(aux) <= coef * E + 1e-6
+
+
+if HAVE_HYPOTHESIS:
+    @given(st.integers(min_value=1, max_value=6),
+           st.integers(min_value=2, max_value=16))
+    @settings(max_examples=10, deadline=None)
+    def test_aux_loss_bounds(seed, T):
+        check_aux_loss_bounds(seed, T)
+else:
+    @pytest.mark.parametrize("seed,T", [(1, 2), (2, 5), (3, 8), (4, 11),
+                                        (5, 16), (6, 3)])
+    def test_aux_loss_bounds(seed, T):
+        check_aux_loss_bounds(seed, T)
 
 
 def test_router_gradients_flow():

@@ -53,6 +53,71 @@ def test_continuous_batching_matches_solo(engine):
         np.testing.assert_array_equal(np.asarray(r.out_tokens[:6]), solo.tokens[0])
 
 
+def test_continuous_batching_single_slot_matches_solo(engine):
+    """Regression for the _splice_lane shape heuristic: with slots=1 the old
+    ``v.shape[0] == lv.shape[0]`` test misclassified batch-leading cache
+    tensors and corrupted the spliced lane."""
+    prompts = [np.arange(5 + 2 * i) % engine.cfg.vocab_size for i in range(3)]
+    reqs = [Request(i, p, max_new_tokens=5) for i, p in enumerate(prompts)]
+    cb = ContinuousBatcher(engine, slots=1)
+    for r in reqs:
+        cb.submit(r)
+    cb.run()
+    for r, p in zip(reqs, prompts):
+        assert r.done
+        solo = engine.generate({"tokens": jnp.asarray(p, jnp.int32)[None]}, 5)
+        np.testing.assert_array_equal(np.asarray(r.out_tokens[:5]), solo.tokens[0])
+
+
+def test_splice_lane_batch_leading_tensor_at_single_slot():
+    """Unit regression: a 2-D batch-leading cache entry spliced at slots=1
+    must receive the lane's row, not a layer-axis write."""
+    from repro.serving.batching import _splice_lane
+    cache = {"pos": jnp.zeros((1,), jnp.int32),
+             "k": jnp.zeros((3, 1, 2, 4, 5)),          # layer-leading
+             "last_tok": jnp.zeros((1, 7), jnp.int32)}  # batch-leading 2-D
+    lane = {"pos": jnp.array([9], jnp.int32),
+            "k": jnp.ones((3, 1, 2, 4, 5)),
+            "last_tok": jnp.full((1, 7), 5, jnp.int32)}
+    import repro.serving.batching as B
+    old = B._BATCH_LEADING_KEYS
+    B._BATCH_LEADING_KEYS = old | {"last_tok"}
+    try:
+        out = _splice_lane(cache, lane, 0)
+    finally:
+        B._BATCH_LEADING_KEYS = old
+    assert int(out["pos"][0]) == 9
+    np.testing.assert_array_equal(np.asarray(out["k"]), np.ones((3, 1, 2, 4, 5)))
+    np.testing.assert_array_equal(np.asarray(out["last_tok"][0]), np.full(7, 5))
+
+
+def test_batcher_eos_terminates_early(engine):
+    """EOS-aware completion: find the token the model actually emits first,
+    declare it EOS, and check the request retires before max_new_tokens."""
+    prompt = np.arange(8) % engine.cfg.vocab_size
+    free = engine.generate({"tokens": jnp.asarray(prompt, jnp.int32)[None]}, 8)
+    eos = int(free.tokens[0][2])          # token emitted at step 2
+    req = Request(0, prompt, max_new_tokens=8, eos_id=eos)
+    cb = ContinuousBatcher(engine, slots=2)
+    cb.submit(req)
+    cb.run()
+    assert req.done
+    assert len(req.out_tokens) <= 3       # stopped at the eos emission
+    assert req.out_tokens[-1] == eos
+
+
+def test_engine_sampled_generation_default_key(engine):
+    """temperature>0 with key=None must not crash (seeded default key) and
+    must be reproducible."""
+    batch = {"tokens": jnp.arange(8, dtype=jnp.int32)[None]}
+    a = engine.generate(batch, 5, temperature=0.8).tokens
+    b = engine.generate(batch, 5, temperature=0.8).tokens
+    np.testing.assert_array_equal(a, b)
+    c = engine.generate(batch, 5, temperature=0.8,
+                        key=jax.random.PRNGKey(123)).tokens
+    assert a.shape == c.shape
+
+
 def test_router_threshold_split(engine):
     eff, perf = paper_fleet()
     router = FleetRouter(engine.cfg, {"eff": eff, "perf": perf},
@@ -72,6 +137,27 @@ def test_router_cost_optimal_prefers_cheaper_system(engine):
                          policy="cost_optimal", lam=1.0)
     # tiny query: efficiency pool must win on energy
     assert router.route(4, 4) == "eff"
+
+
+def test_router_batcher_backend_executes_and_reports(engine):
+    """Routed execution through per-pool ContinuousBatchers: submit queues,
+    drain() runs the decode loops, outputs match the solo engine."""
+    eff, perf = paper_fleet()
+    router = FleetRouter(engine.cfg, {"eff": eff, "perf": perf},
+                         {"eff": engine, "perf": engine}, policy="threshold",
+                         t_in=32)
+    router.attach_batchers(slots=2)
+    prompts = [np.arange(6) % engine.cfg.vocab_size,
+               np.arange(64) % engine.cfg.vocab_size]
+    routed = [router.submit(p, 4) for p in prompts]
+    assert routed[0].pool == "eff" and routed[1].pool == "perf"
+    assert all(rr.request is not None and not rr.request.done for rr in routed)
+    router.drain()
+    for rr, p in zip(routed, prompts):
+        assert rr.request.done
+        solo = engine.generate({"tokens": jnp.asarray(p, jnp.int32)[None]}, 4)
+        np.testing.assert_array_equal(np.asarray(rr.request.out_tokens[:4]),
+                                      solo.tokens[0])
 
 
 def test_router_capacity_aware_spills(engine):
