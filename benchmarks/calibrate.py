@@ -1,0 +1,188 @@
+"""Calibrate `SystemProfile` roofline constants against kernel timings.
+
+Two modes, both writing per-profile artifacts under `experiments/calibration/`:
+
+  * **measured** (default): time the real kernels via
+    `benchmarks.microbench.kernel_phase_samples` (compiled Pallas on TPU, the
+    structurally identical jnp path elsewhere) and fit
+    `compute_eff` / `mem_eff` / `sat_ctx` / `overhead_s` for the profile the
+    host represents (`--profile`, default the local `host-cpu` profile).
+  * **--synthetic**: validate the fitting pipeline per shipped fleet profile —
+    generate timings from the analytic model at perturbed ground-truth
+    constants (+ seeded noise), fit, and assert both the fit error and the
+    parameter recovery are below the documented bounds (exit 1 otherwise).
+    This is the CI smoke (`scripts/ci.sh`).
+
+Fit-error bounds (documented in EXPERIMENTS.md §Calibration):
+  synthetic recovery rel-RMSE < 0.08 (noise floor 3%), measured < 0.35
+  (CPU wall clocks are noisy and the container is shared).
+
+Run: PYTHONPATH=src python benchmarks/calibrate.py [--synthetic] [--smoke]
+"""
+from __future__ import annotations
+
+import argparse
+import json
+import os
+import sys
+from dataclasses import asdict, replace
+from typing import List, Optional, Sequence
+
+import numpy as np
+
+from repro.core.pricing import (Calibration, CalibratedOracle, KernelSample,
+                                _predict, fit_calibration)
+from repro.core.systems import PROFILES, SystemProfile
+
+OUT_DIR = os.path.join(os.path.dirname(__file__), "..", "experiments",
+                       "calibration")
+
+SYNTH_REL_RMSE_BOUND = 0.08   # noise floor is 3%; fit must sit near it
+MEASURED_REL_RMSE_BOUND = 0.35
+
+# What this container's host looks like as a SystemProfile: nominal CPU
+# peak/bandwidth; the fitted efficiencies absorb the real achievable
+# fractions, which is the whole point of calibrating.
+HOST_CPU = SystemProfile(
+    name="host-cpu", kind="eff", chips=1,
+    peak_flops=2.0e11, hbm_bw=5.0e10, ici_bw=0.0,
+    power_peak=65.0, power_idle=10.0, overhead_s=1e-3,
+)
+
+
+def _seed_constants(s: SystemProfile) -> dict:
+    return {"compute_eff": s.compute_eff, "mem_eff": s.mem_eff,
+            "sat_ctx": s.sat_ctx, "overhead_s": s.overhead_s}
+
+
+def _write_artifact(profile: SystemProfile, cal: Calibration,
+                    samples: Sequence[KernelSample], mode: str,
+                    out_dir: str = OUT_DIR) -> str:
+    os.makedirs(out_dir, exist_ok=True)
+    seed_pred = _predict(samples, profile, profile.compute_eff,
+                         profile.mem_eff, profile.sat_ctx, profile.overhead_s)
+    t = np.array([s.t_s for s in samples])
+    seed_rmse = float(np.sqrt(np.mean(((seed_pred - t) / t) ** 2)))
+    path = os.path.join(out_dir, f"{profile.name}.json")
+    with open(path, "w") as f:
+        json.dump({
+            "mode": mode,
+            "calibrations": [asdict(cal)],           # CalibratedOracle.load format
+            "seed_constants": _seed_constants(profile),
+            "seed_rel_rmse": seed_rmse,
+            "fit_rel_rmse": cal.fit_rel_rmse,
+            "samples": [asdict(s) for s in samples],
+        }, f, indent=2, sort_keys=True)
+    return path
+
+
+# ----------------------------------------------------------------- synthetic
+def synthetic_samples(profile: SystemProfile, truth: SystemProfile, *,
+                      n: int = 40, noise: float = 0.03,
+                      seed: int = 0) -> List[KernelSample]:
+    """Timings the analytic model would produce at ``truth``'s constants,
+    with seeded multiplicative noise — ground-truth recovery harness."""
+    rng = np.random.default_rng(seed)
+    out = []
+    for _ in range(n):
+        # straddle the machine-balance ridge so BOTH efficiencies bind on
+        # some samples (otherwise compute_eff is unidentifiable on
+        # bandwidth-rich profiles): base is the bound phase's seconds, r the
+        # log10 distance from the roofline knee (sign picks the regime)
+        base = float(10 ** rng.uniform(-3.0, 0.0))
+        r = float(rng.uniform(-1.5, 1.5))
+        f = base * truth.compute_eff * profile.instance_peak_flops \
+            / (10 ** max(0.0, -r))
+        b = base * truth.mem_eff * profile.instance_hbm_bw \
+            / (10 ** max(0.0, r))
+        ctx = float(rng.integers(0, 4096))
+        t = _predict([KernelSample("synthetic", f, b, ctx, 1.0)], profile,
+                     truth.compute_eff, truth.mem_eff, truth.sat_ctx,
+                     truth.overhead_s)[0]
+        t *= float(1.0 + rng.normal(0.0, noise))
+        out.append(KernelSample("synthetic", f, b, ctx, max(t, 1e-9)))
+    return out
+
+
+def run_synthetic(profiles: Sequence[str], *, n: int = 40,
+                  seed: int = 0, out_dir: str = OUT_DIR) -> bool:
+    """Per-profile ground-truth recovery; returns True iff all in bounds."""
+    ok = True
+    for name in profiles:
+        p = PROFILES[name]
+        truth = replace(p,
+                        compute_eff=p.compute_eff * 0.8,
+                        mem_eff=p.mem_eff * 0.85,
+                        sat_ctx=(p.sat_ctx * 1.3) if p.sat_ctx else None,
+                        overhead_s=p.overhead_s * 1.5)
+        samples = synthetic_samples(p, truth, n=n, seed=seed)
+        cal = fit_calibration(p, samples, fit_sat_ctx=p.sat_ctx is not None)
+        path = _write_artifact(p, cal, samples, "synthetic", out_dir)
+        good = cal.fit_rel_rmse < SYNTH_REL_RMSE_BOUND
+        ce_err = abs(cal.compute_eff - truth.compute_eff) / truth.compute_eff
+        good &= ce_err < 0.25
+        ok &= good
+        print(f"[synthetic] {name}: rel_rmse={cal.fit_rel_rmse:.4f} "
+              f"(bound {SYNTH_REL_RMSE_BOUND}), ce {truth.compute_eff:.3f}"
+              f"->{cal.compute_eff:.3f}, {'OK' if good else 'FAIL'} -> {path}")
+    return ok
+
+
+# ------------------------------------------------------------------ measured
+def run_measured(profile: Optional[str], *, iters: int = 10,
+                 smoke: bool = False, out_dir: str = OUT_DIR) -> bool:
+    from benchmarks.microbench import kernel_phase_samples
+    p = PROFILES.get(profile) if profile else HOST_CPU
+    if p is None:
+        p = HOST_CPU
+    kw = dict(prefill_lens=(128, 256), decode_ctxs=(128, 512),
+              ssm_lens=(256,), iters=2) if smoke else dict(iters=iters)
+    samples = kernel_phase_samples(**kw)
+    # sat_ctx is fit too: host caches make long-context decode superlinear,
+    # which is precisely the degradation term the profile carries
+    cal = fit_calibration(p, samples)
+    path = _write_artifact(p, cal, samples, "measured", out_dir)
+    ok = cal.fit_rel_rmse < MEASURED_REL_RMSE_BOUND
+    print(f"[measured] {p.name}: rel_rmse={cal.fit_rel_rmse:.4f} "
+          f"(bound {MEASURED_REL_RMSE_BOUND}), ce={cal.compute_eff:.2e}, "
+          f"me={cal.mem_eff:.2e}, overhead={cal.overhead_s * 1e3:.3f}ms, "
+          f"{'OK' if ok else 'FAIL'} -> {path}")
+    # show the oracle loads back
+    oracle = CalibratedOracle.load(path)
+    print(f"           loaded {oracle!r}")
+    return ok
+
+
+def main() -> int:
+    ap = argparse.ArgumentParser(description=__doc__)
+    ap.add_argument("--profile", default=None,
+                    help="SystemProfile to calibrate (default: host-cpu)")
+    ap.add_argument("--synthetic", action="store_true",
+                    help="ground-truth recovery validation per fleet profile")
+    ap.add_argument("--smoke", action="store_true",
+                    help="tiny shapes / few iters (CI)")
+    ap.add_argument("--samples", type=int, default=40,
+                    help="synthetic sample count")
+    ap.add_argument("--seed", type=int, default=0)
+    args = ap.parse_args()
+
+    # smoke runs validate the pipeline but must not clobber the recorded
+    # full-sample artifacts
+    out_dir = OUT_DIR
+    if args.smoke:
+        import tempfile
+        out_dir = tempfile.mkdtemp(prefix="calibration-smoke-")
+
+    if args.synthetic:
+        profiles = ([args.profile] if args.profile
+                    else ["m1-pro", "swing-a100", "tpu-v5e-perf",
+                          "tpu-v5lite-eff"])
+        n = 16 if args.smoke else args.samples
+        return 0 if run_synthetic(profiles, n=n, seed=args.seed,
+                                  out_dir=out_dir) else 1
+    return 0 if run_measured(args.profile, smoke=args.smoke,
+                             out_dir=out_dir) else 1
+
+
+if __name__ == "__main__":
+    sys.exit(main())

@@ -15,11 +15,21 @@ import os
 from typing import Dict, List, Tuple
 
 from repro.configs import get_config
-from repro.core import (CapacityAwareScheduler, CostOptimalScheduler, PoolSpec,
-                        Query, Scheduler, ThresholdScheduler, WorkloadSpec,
-                        paper_fleet, sample_workload, simulate_fleet,
-                        threshold_sweep)
-from repro.core.cost import normalized_cost_params
+from repro.core import (AnalyticOracle, CapacityAwareScheduler, CostModel,
+                        CostOptimalScheduler, PoolSpec, Query, Scheduler,
+                        ThresholdScheduler, WorkloadSpec, paper_fleet,
+                        sample_workload, simulate_fleet, threshold_sweep)
+from repro.core.cost import CostParams, normalized_cost_params
+
+# Hot-path pricing: one shared CostModel with a quantized-(m, n) LRU memo.
+# Quantizing to 8-token buckets makes repeated sweep cells hit the memo at
+# >90% while perturbing per-query phase times well under the policy-decision
+# scale (the analytic roofline is locally smooth in m and n).
+SWEEP_QUANT = 8
+
+
+def _sweep_model(cfg, cp: CostParams = CostParams()) -> CostModel:
+    return CostModel(cfg, AnalyticOracle(), cp, quant=SWEEP_QUANT)
 
 OUT_DIR = os.path.join(os.path.dirname(__file__), "..", "experiments", "bench")
 
@@ -38,13 +48,22 @@ def _write(name: str, header: List[str], rows: List[List]) -> str:
     return path
 
 
-def _policies(cfg, eff, perf, n_eff: int, n_perf: int) -> Dict[str, Scheduler]:
-    cp = normalized_cost_params(cfg, perf, lam=0.9)
+def _policies(cfg, eff, perf, n_eff: int, n_perf: int, *,
+              model: CostModel = None,
+              model_cp: CostModel = None) -> Dict[str, Scheduler]:
+    """Schedulers are per-cell (capacity counts differ); the CostModels are
+    shared across cells/policies so the memo actually carries."""
+    if model is None:
+        model = _sweep_model(cfg)
+    if model_cp is None:
+        model_cp = _sweep_model(cfg, normalized_cost_params(cfg, perf, lam=0.9))
     return {
-        "threshold_in32": ThresholdScheduler(cfg, eff, perf, t_in=32),
-        "cost_optimal": CostOptimalScheduler(cfg, [eff, perf]),
+        "threshold_in32": ThresholdScheduler(cfg, eff, perf, t_in=32,
+                                             model=model),
+        "cost_optimal": CostOptimalScheduler(cfg, [eff, perf], model=model),
         "capacity_aware": CapacityAwareScheduler(
-            cfg, [eff, perf], {eff.name: n_eff, perf.name: n_perf}, cp),
+            cfg, [eff, perf], {eff.name: n_eff, perf.name: n_perf},
+            model=model_cp),
     }
 
 
@@ -53,6 +72,8 @@ def fleet_sweep(n_queries: int = 400, model: str = "llama2-7b",
     """rate x mix x policy grid under identical queueing dynamics."""
     cfg = get_config(model)
     eff, perf = paper_fleet()
+    shared = _sweep_model(cfg)       # one memo across every cell and policy
+    shared_cp = _sweep_model(cfg, normalized_cost_params(cfg, perf, lam=0.9))
     rows = []
     for rate in RATES_QPS:
         qs = sample_workload(n_queries, seed=seed,
@@ -61,7 +82,9 @@ def fleet_sweep(n_queries: int = 400, model: str = "llama2-7b",
         for n_eff, n_perf in INSTANCE_MIXES:
             pools = {"eff": PoolSpec(eff, n_eff, SLOTS["eff"]),
                      "perf": PoolSpec(perf, n_perf, SLOTS["perf"])}
-            for pol, sched in _policies(cfg, eff, perf, n_eff, n_perf).items():
+            for pol, sched in _policies(cfg, eff, perf, n_eff, n_perf,
+                                        model=shared,
+                                        model_cp=shared_cp).items():
                 r = simulate_fleet(cfg, qs, pools, sched, policy_name=pol)
                 rows.append([
                     arrival_process, rate, f"{n_eff}x{n_perf}", pol,
@@ -80,7 +103,8 @@ def fleet_sweep(n_queries: int = 400, model: str = "llama2-7b",
 
 
 def zero_load_threshold_sweep(n_queries: int = 200,
-                              model: str = "llama2-7b") -> List[List]:
+                              model: str = "llama2-7b", *,
+                              persist: bool = True) -> List[List]:
     """Fig. 4 as the event-driven zero-load limit: with rate -> 0 and
     capacity >> load, the fleet totals equal the static sweep's (rel 1e-6)."""
     cfg = get_config(model)
@@ -101,9 +125,10 @@ def zero_load_threshold_sweep(n_queries: int = 200,
         rows.append([point.threshold, f"{point.energy_j:.2f}",
                      f"{r.total_energy_j:.2f}", f"{rel:.2e}",
                      "OK" if rel < 1e-6 else "MISMATCH"])
-    _write("fleet_zero_load_check",
-           ["threshold", "static_energy_j", "fleet_energy_j", "rel_err",
-            "status"], rows)
+    if persist:
+        _write("fleet_zero_load_check",
+               ["threshold", "static_energy_j", "fleet_energy_j", "rel_err",
+                "status"], rows)
     return rows
 
 
@@ -135,13 +160,47 @@ def burst_policy_comparison(n_queries: int = 400,
     return rows
 
 
+def smoke(n_queries: int = 40, model: str = "llama2-7b") -> None:
+    """CI gate (scripts/ci.sh): tiny fixed-seed grid. Asserts the zero-load
+    invariant (fleet == static at <1e-6 rel) and that the quantized-memo
+    CostModel actually serves the hot path (hit rate + bounded skew vs exact
+    pricing), so oracle regressions fail CI instead of only benchmarks."""
+    cfg = get_config(model)
+    eff, perf = paper_fleet()
+    # persist=False: the smoke must not clobber the recorded 200-query artifact
+    for row in zero_load_threshold_sweep(n_queries, model, persist=False):
+        assert row[-1] == "OK", f"zero-load invariant broken: {row}"
+    qs = sample_workload(n_queries, seed=3, spec=WorkloadSpec(rate_qps=2.0),
+                         arrival_process="mmpp")
+    pools = {"eff": PoolSpec(eff, 2, 2), "perf": PoolSpec(perf, 2, 4)}
+    model_q = _sweep_model(cfg)
+    r_q = simulate_fleet(cfg, qs, pools,
+                         ThresholdScheduler(cfg, eff, perf, t_in=32,
+                                            model=model_q))
+    r_x = simulate_fleet(cfg, qs, pools,
+                         ThresholdScheduler(cfg, eff, perf, t_in=32))
+    info = model_q.memo_info()
+    hit_rate = info["hits"] / max(1, info["hits"] + info["misses"])
+    skew = abs(r_q.total_energy_j - r_x.total_energy_j) / r_x.total_energy_j
+    assert hit_rate >= 0.4, f"memo ineffective: {info}"
+    assert skew < 0.02, f"quantized pricing skew {skew:.4f} too large"
+    print(f"fleet-sweep smoke OK: memo hit rate {hit_rate:.2f}, "
+          f"quantization skew {skew:.2e}")
+
+
 def main() -> None:
     ap = argparse.ArgumentParser(description=__doc__)
     ap.add_argument("--queries", type=int, default=400)
     ap.add_argument("--model", default="llama2-7b")
     ap.add_argument("--process", default="mmpp",
                     choices=("poisson", "diurnal", "mmpp"))
+    ap.add_argument("--smoke", action="store_true",
+                    help="tiny fixed-seed CI gate; asserts invariants")
     args = ap.parse_args()
+
+    if args.smoke:
+        smoke(min(args.queries, 40), args.model)
+        return
 
     print("== zero-load check (event-driven == static Fig 4) ==")
     for row in zero_load_threshold_sweep(min(args.queries, 200), args.model):

@@ -1,14 +1,21 @@
 """Wall-clock microbenchmarks of the real JAX serving/training steps
-(reduced configs — CPU container; TPU numbers come from the roofline)."""
+(reduced configs — CPU container; TPU numbers come from the roofline), plus
+``kernel_phase_samples``: timed invocations of the shipped attention/SSM
+kernels with their analytic work counts attached — the measurement feed for
+``core.pricing.fit_calibration`` / ``CalibratedOracle``."""
 from __future__ import annotations
 
+import functools
 import time
-from typing import List
+from typing import List, Optional, Sequence
 
 import jax
 import jax.numpy as jnp
+import numpy as np
 
 from repro.configs import get_config
+from repro.core.pricing import KernelSample
+from repro.kernels import ops
 from repro.models import model as M
 from repro.serving.engine import InferenceEngine
 from repro.training import data as D
@@ -23,6 +30,102 @@ def _bench(fn, *args, iters: int = 5):
         out = fn(*args)
     jax.block_until_ready(out)
     return (time.perf_counter() - t0) / iters * 1e6
+
+
+def _time_s(fn, *args, iters: int = 5) -> float:
+    """Min wall seconds per call (compile + warmup excluded). Min, not mean:
+    shared-host scheduling noise is strictly additive, so the minimum is the
+    best estimator of the kernel's own time."""
+    for _ in range(2):
+        out = fn(*args)                   # compile + warmup
+    jax.block_until_ready(out)
+    best = float("inf")
+    for _ in range(iters):
+        t0 = time.perf_counter()
+        jax.block_until_ready(fn(*args))
+        best = min(best, time.perf_counter() - t0)
+    return best
+
+
+# ------------------------------------------------------- calibration samples
+def kernel_phase_samples(*, prefill_lens: Sequence[int] = (128, 256, 512, 1024),
+                         decode_ctxs: Sequence[int] = (128, 256, 512, 1024,
+                                                       2048, 4096),
+                         ssm_lens: Sequence[int] = (256, 512, 1024),
+                         batch: int = 1, heads: int = 4, kv_heads: int = 2,
+                         head_dim: int = 64, state_dim: int = 64,
+                         ssm_head_dim: int = 64, iters: int = 5,
+                         backend: Optional[str] = None,
+                         seed: int = 0) -> List[KernelSample]:
+    """Time the real kernels behind the serving stack and return samples the
+    roofline calibration can fit (``fit_calibration``).
+
+    Kernels go through ``kernels.ops`` backend dispatch: compiled Pallas on
+    TPU, the structurally identical jnp path elsewhere — so the same command
+    calibrates whichever hardware it runs on. FLOPs/bytes are the kernel's
+    analytic work for the timed shape; ``ctx`` is the context length that
+    drives ``SystemProfile.sat_ctx`` degradation (0 for the SSD scan, whose
+    running state is constant-size).
+    """
+    rng = np.random.default_rng(seed)
+    bk = {"backend": backend} if backend else {}
+    isz = 4  # float32
+    B, Hq, Hkv, Dh = batch, heads, kv_heads, head_dim
+    out: List[KernelSample] = []
+    # The jnp stand-in path (non-TPU hosts) materializes the (Sq, Sk) score
+    # matrix that the fused Pallas kernel keeps in VMEM — count those bytes
+    # when that is the variant actually being timed, so the fit targets the
+    # measured kernel, not an idealized one.
+    materializes_scores = ops.resolve_backend(backend or "auto") == "ref"
+
+    # ---- flash attention (prefill phase) ----
+    fa = jax.jit(functools.partial(ops.flash_attention, causal=True, **bk))
+    for S in prefill_lens:
+        q = jnp.asarray(rng.normal(size=(B, Hq, S, Dh)), jnp.float32)
+        k = jnp.asarray(rng.normal(size=(B, Hkv, S, Dh)), jnp.float32)
+        v = jnp.asarray(rng.normal(size=(B, Hkv, S, Dh)), jnp.float32)
+        t = _time_s(fa, q, k, v, iters=iters)
+        if materializes_scores:
+            # the jnp path computes the FULL unmasked S x S einsums and masks
+            # afterward — no causal halving in executed FLOPs
+            flops = 4.0 * B * Hq * S * S * Dh
+        else:
+            flops = 2.0 * B * Hq * S * S * Dh          # QK^T + PV, causal-halved
+        byts = isz * (2.0 * B * Hq * S * Dh + 2.0 * B * Hkv * S * Dh)
+        if materializes_scores:
+            byts += isz * 3.0 * B * Hq * S * S         # scores: write, softmax, read
+        out.append(KernelSample("flash_attention", flops, byts, float(S), t))
+
+    # ---- decode attention (per-token decode phase) ----
+    da = jax.jit(functools.partial(ops.decode_attention, **bk))
+    for ctx in decode_ctxs:
+        q = jnp.asarray(rng.normal(size=(B, Hq, 1, Dh)), jnp.float32)
+        kc = jnp.asarray(rng.normal(size=(B, Hkv, ctx, Dh)), jnp.float32)
+        vc = jnp.asarray(rng.normal(size=(B, Hkv, ctx, Dh)), jnp.float32)
+        kv_len = jnp.full((B,), ctx, jnp.int32)
+        t = _time_s(da, q, kc, vc, kv_len, iters=iters)
+        flops = 4.0 * B * Hq * ctx * Dh                # QK^T + PV at length ctx
+        byts = isz * (2.0 * B * Hkv * ctx * Dh + 2.0 * B * Hq * Dh)
+        if materializes_scores:
+            byts += isz * 3.0 * B * Hq * ctx
+        out.append(KernelSample("decode_attention", flops, byts, float(ctx), t))
+
+    # ---- SSD scan (SSM prefill phase) ----
+    H, P, N, chunk = heads, ssm_head_dim, state_dim, 128
+    ss = jax.jit(functools.partial(ops.ssd_scan, chunk=chunk, **bk))
+    for S in ssm_lens:
+        x = jnp.asarray(rng.normal(size=(B, H, S, P)), jnp.float32)
+        dt = jnp.asarray(rng.uniform(0.001, 0.2, size=(B, H, S)), jnp.float32)
+        A = jnp.asarray(-rng.uniform(0.5, 4.0, size=(H,)), jnp.float32)
+        Bm = jnp.asarray(rng.normal(size=(B, S, N)), jnp.float32)
+        Cm = jnp.asarray(rng.normal(size=(B, S, N)), jnp.float32)
+        t = _time_s(ss, x, dt, A, Bm, Cm, iters=iters)
+        # chunked dual form: CB^T + att@x per chunk, C@state + state update
+        flops = 2.0 * B * H * S * (chunk * N + chunk * P + 2.0 * N * P)
+        byts = isz * (2.0 * B * H * S * P + 2.0 * B * S * N + B * H * S)
+        out.append(KernelSample("ssm_scan", flops, byts, 0.0, t))
+
+    return out
 
 
 def serving_microbench() -> List:

@@ -1,6 +1,6 @@
 """Quickstart: the paper's scheduling technique in five minutes.
 
-1. Price a query on two device classes with the analytic cost model.
+1. Price a query on two device classes with the unified CostModel.
 2. Find the energy-optimal threshold on an Alpaca-like workload (paper: 32).
 3. Serve real tokens through the hybrid router on a reduced model.
 
@@ -10,9 +10,9 @@ import jax
 import numpy as np
 
 from repro.configs import get_config
-from repro.core import (CostOptimalScheduler, alpaca_like, energy, headline,
-                        optimal_threshold, paper_fleet, runtime, simulate,
-                        threshold_sweep)
+from repro.core import (CostModel, CostOptimalScheduler, TableOracle,
+                        alpaca_like, headline, optimal_threshold, paper_fleet,
+                        simulate, threshold_sweep)
 from repro.models import model as M
 from repro.serving.engine import InferenceEngine
 from repro.serving.router import FleetRouter
@@ -22,10 +22,19 @@ def main():
     # ---- 1. the cost model: E(m, n, s) and R(m, n, s) ------------------------
     cfg = get_config("llama2-7b")       # one of the paper's three models
     eff, perf = paper_fleet()           # M1-Pro, 8xA100 (paper Table 1)
+    model = CostModel(cfg)              # analytic oracle; swap in a
+    #                                     TableOracle/CalibratedOracle to
+    #                                     re-price every consumer at once
     for m in (8, 64, 512):
-        ee, ep = energy(cfg, m, 32, eff), energy(cfg, m, 32, perf)
+        ee, ep = model.energy(m, 32, eff), model.energy(m, 32, perf)
         print(f"query ({m:4d} in, 32 out): M1-Pro {ee:7.1f} J vs A100 {ep:7.1f} J "
               f"-> {'efficiency' if ee < ep else 'performance'} pool")
+    # same numbers through a precomputed interpolation table (fleet-sweep
+    # hot-path backend):
+    table = CostModel(cfg, TableOracle(cfg))
+    print(f"table-oracle check at (100, 70): analytic "
+          f"{model.runtime(100, 70, perf):.3f}s vs interpolated "
+          f"{table.runtime(100, 70, perf):.3f}s")
 
     # ---- 2. the paper's Section 6 analysis -----------------------------------
     qs = alpaca_like(5000, seed=0)

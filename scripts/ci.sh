@@ -12,3 +12,11 @@ export PYTHONPATH="src${PYTHONPATH:+:$PYTHONPATH}"
 python -m pytest -q --collect-only >/dev/null
 
 python -m pytest -x -q
+
+# Oracle regression gates (fast, fixed seeds): the calibration fit must
+# recover ground-truth roofline constants within its documented bound, and
+# the fleet sweep's quantized-memo pricing must preserve the zero-load
+# invariant with bounded skew. Failures here mean the pricing layer broke,
+# not just the benchmarks.
+python benchmarks/calibrate.py --synthetic --smoke
+python benchmarks/fleet_sweep.py --smoke

@@ -6,6 +6,10 @@ from repro.core.perf_model import runtime, throughput, query_phases
 from repro.core.energy import (energy, energy_per_token_in, energy_per_token_out,
                                crossover_threshold)
 from repro.core.cost import CostParams, cost, normalized_cost_params
+from repro.core.pricing import (PerfOracle, AnalyticOracle, TableOracle,
+                                CalibratedOracle, Calibration, CostModel,
+                                KernelSample, fit_calibration,
+                                default_cost_model)
 from repro.core.workload import (Query, WorkloadSpec, sample_workload, alpaca_like,
                                  token_histogram, generate_arrivals,
                                  poisson_arrivals, diurnal_arrivals,

@@ -10,7 +10,9 @@ swings 2-4x daily. We extend Eq. 1 to
 and add a scheduler that exploits the *temporal* dimension the paper leaves
 on the table: deferrable queries (the paper's own "overnight batch" use case,
 Section 6.3) wait for low-carbon windows; interactive ones route by the
-spatial hybrid rule as before.
+spatial hybrid rule as before. All pricing goes through the unified
+``CostModel`` (with this module's ``CarbonProfile`` attached), so swapping
+the perf oracle re-prices carbon decisions too.
 """
 from __future__ import annotations
 
@@ -19,9 +21,8 @@ from dataclasses import dataclass
 from typing import List, Optional, Sequence
 
 from repro.configs.base import ModelConfig
-from repro.core.energy import energy
-from repro.core.perf_model import runtime
-from repro.core.scheduler import Assignment, Scheduler
+from repro.core.pricing import AnalyticOracle, CostModel, CostParams
+from repro.core.scheduler import Assignment, FleetState, Scheduler
 from repro.core.systems import SystemProfile
 from repro.core.workload import Query
 
@@ -49,14 +50,36 @@ class CarbonAwareScheduler(Scheduler):
     batch work (paper Section 6.3's own example) and deferred to the next
     low-carbon window (intensity below ``defer_below`` x mean); interactive
     queries run immediately on the carbon-cheapest system.
+
+    Online use: ``dispatch(q, fleet_state)`` makes the same route-now vs
+    defer decision against the snapshot clock (``fleet_state.time_s``) and
+    returns the system that is carbon-cheapest at the planned execution
+    time — deferrable work is thereby steered to the hardware that will be
+    greenest when it actually runs, while the query itself still enters the
+    queue now (the event-driven simulator owns the clock).
     """
 
     def __init__(self, cfg: ModelConfig, systems: Sequence[SystemProfile],
                  carbon: CarbonProfile = CarbonProfile(), *,
                  defer_out_threshold: int = 256, defer_below: float = 0.85,
-                 max_defer_s: float = 24 * 3600.0):
-        super().__init__(cfg, systems)
-        self.carbon = carbon
+                 max_defer_s: float = 24 * 3600.0,
+                 model: Optional[CostModel] = None):
+        if model is None:
+            model = CostModel(cfg, AnalyticOracle(), CostParams(),
+                              carbon=carbon)
+        elif model.carbon is None:
+            model = CostModel(cfg, model.oracle, model.cp, carbon=carbon,
+                              quant=model.quant, memo_size=model.memo_size)
+        elif carbon != CarbonProfile() and carbon != model.carbon:
+            raise ValueError(
+                "conflicting carbon profiles: both carbon= and a "
+                "carbon-bearing model= were given and disagree; build the "
+                "model with the intended CarbonProfile")
+        super().__init__(cfg, systems, model=model)
+        # the model's profile is authoritative: window planning (_plan) and
+        # pricing (model.grams) must read the SAME carbon curve, so a model
+        # passed in with its own CarbonProfile overrides the ctor default
+        self.carbon = self.model.carbon
         self.defer_out_threshold = defer_out_threshold
         self.defer_below = defer_below
         self.max_defer_s = max_defer_s
@@ -71,19 +94,35 @@ class CarbonAwareScheduler(Scheduler):
             t += step
         return t_s                                       # no window: run now
 
+    def _deferrable(self, q: Query) -> bool:
+        return q.n > self.defer_out_threshold
+
+    def _plan(self, q: Query, now: float) -> float:
+        """Route-now vs defer: planned execution time for ``q`` seen at
+        clock ``now``."""
+        return self._next_green_window(now) if self._deferrable(q) else now
+
+    def _greenest(self, q: Query, t_exec: float) -> SystemProfile:
+        return min(self.systems,
+                   key=lambda s: self.model.grams(q.m, q.n, s, t_exec))
+
+    def choose(self, q: Query) -> SystemProfile:
+        """Workload-only decision at the query's own arrival clock."""
+        return self._greenest(q, self._plan(q, q.arrival_s))
+
+    def dispatch(self, q: Query, fleet: Optional[FleetState] = None) -> SystemProfile:
+        """Online dispatch against the fleet snapshot's clock."""
+        now = fleet.time_s if fleet is not None else q.arrival_s
+        return self._greenest(q, self._plan(q, now))
+
     def assign(self, queries: Sequence[Query]) -> List[Assignment]:
         out = []
         for q in queries:
-            t_exec = (self._next_green_window(q.arrival_s)
-                      if q.n > self.defer_out_threshold else q.arrival_s)
-            best, best_g, best_e, best_r = None, float("inf"), 0.0, 0.0
-            for s in self.systems:
-                e = energy(self.cfg, q.m, q.n, s)
-                g = self.carbon.grams(e, t_exec)
-                if g < best_g:
-                    best, best_g, best_e, best_r = s, g, e, runtime(
-                        self.cfg, q.m, q.n, s)
-            out.append(Assignment(q, best, best_e, best_r,
+            t_exec = self._plan(q, q.arrival_s)
+            best = self._greenest(q, t_exec)
+            out.append(Assignment(q, best,
+                                  self.model.energy(q.m, q.n, best),
+                                  self.model.runtime(q.m, q.n, best),
                                   wait_s=t_exec - q.arrival_s))
         return out
 

@@ -5,36 +5,36 @@
 lambda in [0, 1] trades energy (J) against runtime (s). As in the paper the
 two terms carry different units; optional normalizers express both relative
 to a reference system so lambda is dimensionless in practice.
+
+This module is now a thin deprecation shim over the unified pricing layer
+(``core.pricing.CostModel``): the free functions price through a shared
+per-config analytic ``CostModel``, so their values are bit-for-bit what they
+always were. New code should take a ``CostModel`` directly.
 """
 from __future__ import annotations
 
-from dataclasses import dataclass
-from typing import Optional
-
 from repro.configs.base import ModelConfig
-from repro.core.energy import energy
-from repro.core.perf_model import runtime
+from repro.core.pricing import CostParams, default_cost_model
 from repro.core.systems import SystemProfile
 
-
-@dataclass(frozen=True)
-class CostParams:
-    lam: float = 1.0                     # 1.0 = pure energy (paper's Section 6)
-    e_norm: float = 1.0                  # J scale
-    r_norm: float = 1.0                  # s scale
+__all__ = ["CostParams", "cost", "normalized_cost_params"]
 
 
 def cost(cfg: ModelConfig, m: int, n: int, s: SystemProfile,
          cp: CostParams = CostParams(), batch: int = 1) -> float:
-    e = energy(cfg, m, n, s, batch) / cp.e_norm
-    r = runtime(cfg, m, n, s, batch) / cp.r_norm
+    """Deprecated shim: ``CostModel(cfg, cp=cp).cost(m, n, s)``."""
+    model = default_cost_model(cfg)
+    e = model.energy(m, n, s, batch) / cp.e_norm
+    r = model.runtime(m, n, s, batch) / cp.r_norm
     return cp.lam * e + (1.0 - cp.lam) * r
 
 
 def normalized_cost_params(cfg: ModelConfig, ref: SystemProfile,
                            lam: float, m: int = 128, n: int = 128) -> CostParams:
     """CostParams normalized so E and R are O(1) on the reference system at a
-    representative query size — makes lambda behave as a true preference."""
+    representative query size — makes lambda behave as a true preference.
+    Deprecated shim: see ``CostModel.normalized``."""
+    model = default_cost_model(cfg)
     return CostParams(lam=lam,
-                      e_norm=max(energy(cfg, m, n, ref), 1e-9),
-                      r_norm=max(runtime(cfg, m, n, ref), 1e-9))
+                      e_norm=max(model.energy(m, n, ref), 1e-9),
+                      r_norm=max(model.runtime(m, n, ref), 1e-9))

@@ -9,22 +9,23 @@ This reproduces the paper's central empirical finding structurally:
   * an efficiency-class device has far lower allocated-idle power, so it wins
     below a workload threshold, and loses above it where the performance
     instance reaches high utilization.
+
+The free functions here are deprecation shims over the unified pricing layer
+(``core.pricing.CostModel`` with the analytic oracle — bit-for-bit identical
+values, shared memo). New code should take a ``CostModel``.
 """
 from __future__ import annotations
 
 from repro.configs.base import ModelConfig
-from repro.core.perf_model import query_phases
+from repro.core.pricing import default_cost_model
 from repro.core.systems import SystemProfile
 
 
 def energy(cfg: ModelConfig, m: int, n: int, s: SystemProfile,
            batch: int = 1) -> float:
-    """E(m, n, s) in joules (Eq. 1's energy term)."""
-    ph = query_phases(cfg, m, n, s, batch)
-    e = ph.t_prefill * s.power(ph.util_prefill)
-    e += ph.t_decode * s.power(ph.util_decode)
-    e += ph.t_overhead * s.power(0.0)
-    return e
+    """E(m, n, s) in joules (Eq. 1's energy term).
+    Deprecated shim: ``CostModel(cfg).energy(m, n, s)``."""
+    return default_cost_model(cfg).energy(m, n, s, batch)
 
 
 def energy_per_token_in(cfg: ModelConfig, m: int, s: SystemProfile,

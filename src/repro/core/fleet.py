@@ -18,11 +18,15 @@ Event loop (heap-ordered, deterministic under a fixed workload seed):
                      ``serving.batching.ContinuousBatcher``).
   * **batch-step** — an instance's decode group advances. Decode steps are
                      shared across co-resident requests (the batcher's slot
-                     model): each resident's per-token time is the analytic
-                     ``query_phases(..., batch=b).t_decode / n`` at the current
+                     model): each resident's per-token time is the priced
+                     ``model.phases(..., batch=b).t_decode / n`` at the current
                      occupancy ``b``, so weight streaming amortizes across the
                      batch. The loop re-linearizes on every occupancy change
                      instead of emitting one event per token.
+
+All pricing flows through one ``CostModel`` (``core.pricing``) — by default
+the dispatch policy's own, so simulator and scheduler agree on phase times
+whichever perf oracle (analytic / table / calibrated) is plugged in.
   * **completion** — a resident finishes its output tokens; the slot frees
                      and the queue refills it.
 
@@ -44,7 +48,7 @@ from typing import Dict, List, Optional, Sequence, Tuple
 import numpy as np
 
 from repro.configs.base import ModelConfig
-from repro.core.perf_model import query_phases, runtime
+from repro.core.pricing import AnalyticOracle, CostModel
 from repro.core.scheduler import FleetState, PoolSnapshot, Scheduler
 from repro.core.systems import SystemProfile
 from repro.core.workload import Query
@@ -161,23 +165,23 @@ class _Resident:
     """A request occupying one slot of an instance."""
     __slots__ = ("rec", "phases1", "rem_tokens", "prefill_end", "_t_tok")
 
-    def __init__(self, cfg: ModelConfig, rec: RequestRecord, s: SystemProfile,
+    def __init__(self, model: CostModel, rec: RequestRecord, s: SystemProfile,
                  now: float):
         self.rec = rec
         q = rec.query
-        self.phases1 = query_phases(cfg, q.m, q.n, s, batch=1)
+        self.phases1 = model.phases(q.m, q.n, s, batch=1)
         # overhead + per-request prefill run before the resident joins the
         # decode group (ContinuousBatcher: prefill per-request, decode batched)
         self.prefill_end = now + self.phases1.t_overhead + self.phases1.t_prefill
         self.rem_tokens = float(q.n)
         self._t_tok: Dict[int, Tuple[float, float]] = {}
 
-    def tok_time_util(self, cfg: ModelConfig, s: SystemProfile,
+    def tok_time_util(self, model: CostModel, s: SystemProfile,
                       b: int) -> Tuple[float, float]:
         """(seconds per output token, decode utilization) at occupancy b."""
         hit = self._t_tok.get(b)
         if hit is None:
-            ph = query_phases(cfg, self.rec.query.m, self.rec.query.n, s, batch=b)
+            ph = model.phases(self.rec.query.m, self.rec.query.n, s, batch=b)
             hit = (ph.t_decode / max(1, self.rec.query.n), ph.util_decode)
             self._t_tok[b] = hit
         return hit
@@ -200,7 +204,7 @@ class _Instance:
     def free_slots(self) -> int:
         return self.slots - len(self.residents)
 
-    def advance(self, cfg: ModelConfig, now: float) -> None:
+    def advance(self, model: CostModel, now: float) -> None:
         """Progress decode/prefill state from last_t to now.
 
         Event scheduling guarantees no resident crosses prefill->decode
@@ -217,7 +221,7 @@ class _Instance:
         b = len(decoding)
         s = self.pool.spec.system
         for r in decoding:
-            t_tok, util = r.tok_time_util(cfg, s, b)
+            t_tok, util = r.tok_time_util(model, s, b)
             steps = dt / t_tok if t_tok > 0 else r.rem_tokens
             steps = min(steps, r.rem_tokens)
             r.rem_tokens -= steps
@@ -251,7 +255,7 @@ class _Instance:
             self.residents.remove(r)
         return done
 
-    def next_event_time(self, cfg: ModelConfig, now: float) -> Optional[float]:
+    def next_event_time(self, model: CostModel, now: float) -> Optional[float]:
         """Earliest upcoming prefill-finish or decode completion."""
         if not self.residents:
             return None
@@ -262,7 +266,7 @@ class _Instance:
             if r.prefill_end > now + 1e-12:
                 t = min(t, r.prefill_end)
             else:
-                t_tok, _ = r.tok_time_util(cfg, self.pool.spec.system, b)
+                t_tok, _ = r.tok_time_util(model, self.pool.spec.system, b)
                 t = min(t, now + r.rem_tokens * t_tok)
         return t if np.isfinite(t) else None
 
@@ -288,7 +292,7 @@ class _PoolRuntime:
         self.queued_service_s -= service_s
         return rec
 
-    def snapshot(self, cfg: ModelConfig, now: float) -> PoolSnapshot:
+    def snapshot(self, model: CostModel, now: float) -> PoolSnapshot:
         busy = sum(len(i.residents) for i in self.instances)
         return PoolSnapshot(
             system=self.spec.system,
@@ -296,10 +300,10 @@ class _PoolRuntime:
             slots_per_instance=self.spec.slots,
             busy_slots=busy,
             queue_len=len(self.queue),
-            est_wait_s=self.est_wait(cfg, now),
+            est_wait_s=self.est_wait(model, now),
         )
 
-    def est_wait(self, cfg: ModelConfig, now: float) -> float:
+    def est_wait(self, model: CostModel, now: float) -> float:
         """Estimated queueing delay for a new arrival: time until the next
         slot frees, plus the queued backlog spread over all slots."""
         total_slots = self.spec.instances * self.spec.slots
@@ -307,7 +311,7 @@ class _PoolRuntime:
         backlog = self.queued_service_s / max(1, total_slots)
         if free > 0:
             return backlog
-        nxt = [i.next_event_time(cfg, now) for i in self.instances]
+        nxt = [i.next_event_time(model, now) for i in self.instances]
         nxt = [t for t in nxt if t is not None]
         next_free = (min(nxt) - now) if nxt else 0.0
         return max(0.0, next_free) + backlog
@@ -323,10 +327,15 @@ class FleetSimulator:
     """
 
     def __init__(self, cfg: ModelConfig, pools: Dict[str, PoolSpec],
-                 scheduler: Scheduler, *, queue_discipline: str = "fifo"):
+                 scheduler: Scheduler, *, queue_discipline: str = "fifo",
+                 model: Optional[CostModel] = None):
         if queue_discipline not in ("fifo", "sjf"):
             raise ValueError(f"unknown queue discipline {queue_discipline!r}")
         self.cfg = cfg
+        # one pricing seam for the whole simulation: default to the policy's
+        # own CostModel so simulator and scheduler price identically
+        self.model = model if model is not None \
+            else getattr(scheduler, "model", None) or CostModel(cfg, AnalyticOracle())
         self.pools = {n: _PoolRuntime(n, spec) for n, spec in pools.items()}
         self.scheduler = scheduler
         self.queue_discipline = queue_discipline
@@ -344,7 +353,7 @@ class FleetSimulator:
             raise RuntimeError("FleetSimulator is single-shot (instances hold "
                                "clock state); build a new one per run")
         self._ran = True
-        cfg = self.cfg
+        model = self.model
         seq = itertools.count()
         events: List[Tuple[float, int, int, object]] = []
         for rid, q in enumerate(sorted(queries, key=lambda q: q.arrival_s)):
@@ -361,7 +370,7 @@ class FleetSimulator:
                 rec = RequestRecord(rid, q, pool.name, t_arrival=t)
                 records.append(rec)
                 pool.result.queries += 1
-                svc = runtime(cfg, q.m, q.n, pool.spec.system)
+                svc = model.runtime(q.m, q.n, pool.spec.system)
                 key = svc if self.queue_discipline == "sjf" else t
                 pool.enqueue(key, next(seq), rec, svc)
                 self._refill(pool, t, events, seq)
@@ -369,7 +378,7 @@ class FleetSimulator:
                 inst, version = payload
                 if version != inst.version:
                     continue                        # stale event
-                inst.advance(cfg, t)
+                inst.advance(model, t)
                 self._complete(inst, t)
                 self._refill(inst.pool, t, events, seq)
                 self._reschedule(inst, t, events, seq)
@@ -380,7 +389,7 @@ class FleetSimulator:
     # ------------------------------------------------------------- internals
     def _fleet_state(self, now: float) -> FleetState:
         return FleetState(time_s=now,
-                          pools={n: p.snapshot(self.cfg, now)
+                          pools={n: p.snapshot(self.model, now)
                                  for n, p in self.pools.items()})
 
     def _dispatch(self, q: Query, now: float) -> _PoolRuntime:
@@ -388,6 +397,7 @@ class FleetSimulator:
         name = self._by_system.get(s.name)
         if name is None:
             raise KeyError(f"scheduler dispatched to unknown system {s.name!r}")
+        self.scheduler.observe(q, s)
         return self.pools[name]
 
     def _complete(self, inst: _Instance, now: float) -> None:
@@ -402,9 +412,9 @@ class FleetSimulator:
             if inst.free_slots <= 0:
                 break
             rec = pool.dequeue()
-            inst.advance(self.cfg, now)
+            inst.advance(self.model, now)
             self._complete(inst, now)
-            res = _Resident(self.cfg, rec, pool.spec.system, now)
+            res = _Resident(self.model, rec, pool.spec.system, now)
             rec.t_start = now
             rec.t_decode = res.prefill_end
             inst.residents.append(res)
@@ -412,7 +422,7 @@ class FleetSimulator:
 
     def _reschedule(self, inst: _Instance, now: float, events, seq) -> None:
         inst.version += 1
-        nxt = inst.next_event_time(self.cfg, now)
+        nxt = inst.next_event_time(self.model, now)
         if nxt is not None:
             heapq.heappush(events, (max(nxt, now), next(seq), INSTANCE,
                                     (inst, inst.version)))
@@ -437,8 +447,9 @@ class FleetSimulator:
 def simulate_fleet(cfg: ModelConfig, queries: Sequence[Query],
                    pools: Dict[str, PoolSpec], scheduler: Scheduler, *,
                    queue_discipline: str = "fifo",
-                   policy_name: Optional[str] = None) -> FleetSimResult:
+                   policy_name: Optional[str] = None,
+                   model: Optional[CostModel] = None) -> FleetSimResult:
     """One-call wrapper: build a FleetSimulator and run the workload."""
     return FleetSimulator(cfg, pools, scheduler,
-                          queue_discipline=queue_discipline
+                          queue_discipline=queue_discipline, model=model
                           ).run(queries, policy_name)

@@ -1,0 +1,522 @@
+"""Unified pricing layer: pluggable ``PerfOracle`` backends behind one
+``CostModel``.
+
+Every component that prices a query — the Eq. 1 cost function, all
+schedulers, the carbon extension, the discrete-event fleet simulator, and
+the serving router — goes through this seam. A ``PerfOracle`` answers one
+question (per-phase seconds + utilization for a query on a system); the
+``CostModel`` turns phases into energy (J), runtime (s), grams of CO2, and
+the paper's U(m, n, s) = lambda*E + (1-lambda)*R, with an optional
+quantized-(m, n) LRU memo for simulation hot paths.
+
+Backends:
+  * ``AnalyticOracle``   — the roofline model (``perf_model.query_phases``),
+                           bit-for-bit identical to the historical
+                           ``energy()``/``runtime()`` free functions.
+  * ``TableOracle``      — bilinear interpolation over a log-spaced (m, n)
+                           grid of per-phase times; grids are precomputed
+                           from another oracle or loaded from measurements.
+  * ``CalibratedOracle`` — the analytic form with ``compute_eff`` /
+                           ``mem_eff`` / ``sat_ctx`` / ``overhead_s`` FIT to
+                           measured kernel timings (``fit_calibration``, fed
+                           by ``benchmarks/microbench.kernel_phase_samples``
+                           timing the real Pallas kernels). Artifacts live
+                           under ``experiments/calibration/``.
+
+Why calibration: *Offline Energy-Optimal LLM Serving* (arXiv 2407.04014) and
+*Energy Considerations of LLM Inference* (arXiv 2504.17674) both find that
+workload-based energy models only transfer across hardware when fit to
+measured runtimes; hand-tuned roofline efficiencies do not.
+"""
+from __future__ import annotations
+
+import json
+import math
+from collections import OrderedDict
+from dataclasses import asdict, dataclass, replace
+from typing import (TYPE_CHECKING, Dict, Iterable, List, Optional, Protocol,
+                    Sequence, Tuple, runtime_checkable)
+
+import numpy as np
+
+from repro.configs.base import ModelConfig
+from repro.core.perf_model import QueryPhases, query_phases
+from repro.core.systems import SystemProfile
+
+if TYPE_CHECKING:   # avoid a runtime cycle: carbon imports pricing
+    from repro.core.carbon import CarbonProfile
+
+
+@dataclass(frozen=True)
+class CostParams:
+    """Eq. 1 parameters (historically defined in ``core.cost``, which now
+    re-exports this)."""
+    lam: float = 1.0                     # 1.0 = pure energy (paper's Section 6)
+    e_norm: float = 1.0                  # J scale
+    r_norm: float = 1.0                  # s scale
+
+
+# ------------------------------------------------------------------ protocol
+@runtime_checkable
+class PerfOracle(Protocol):
+    """Answers: how long does query (m, n) take on ``system``, per phase?"""
+
+    def phases(self, cfg: ModelConfig, m: int, n: int, system: SystemProfile,
+               batch: int = 1) -> QueryPhases: ...
+
+
+class AnalyticOracle:
+    """The repo's roofline model, moved behind the oracle interface.
+
+    ``phases`` delegates verbatim to ``perf_model.query_phases`` so energy
+    and runtime derived from it are bit-for-bit identical to the historical
+    free functions (asserted in ``tests/test_pricing.py``).
+    """
+
+    name = "analytic"
+
+    def phases(self, cfg: ModelConfig, m: int, n: int, system: SystemProfile,
+               batch: int = 1) -> QueryPhases:
+        return query_phases(cfg, m, n, system, batch)
+
+    def __repr__(self) -> str:
+        return "AnalyticOracle()"
+
+
+# --------------------------------------------------------------- table oracle
+def default_grid(lo: int = 1, hi: int = 4096) -> np.ndarray:
+    """Log2-spaced token grid: lo, 2*lo, 4*lo, ... up to hi (inclusive)."""
+    ks = range(int(math.floor(math.log2(max(1, lo)))),
+               int(math.floor(math.log2(hi))) + 1)
+    return np.array([1 << k for k in ks if lo <= (1 << k) <= hi], dtype=float)
+
+
+@dataclass(frozen=True)
+class PhaseTable:
+    """Per-phase values sampled on an (m, n) grid for one (system, batch).
+
+    Prefill and decode are stored *per token* (t_prefill/m, t_decode/n): both
+    are near-linear in their own token count, so interpolating the per-token
+    rate and rescaling is far more accurate than interpolating totals.
+    """
+    m_grid: np.ndarray                 # (M,) ascending
+    n_grid: np.ndarray                 # (N,) ascending
+    tp_tok: np.ndarray                 # (M, N) prefill seconds per input token
+    td_tok: np.ndarray                 # (M, N) decode seconds per output token
+    util_prefill: np.ndarray           # (M, N)
+    util_decode: np.ndarray            # (M, N)
+    t_overhead: float
+
+    def _coords(self, grid: np.ndarray, x: float) -> Tuple[int, int, float]:
+        """Clamped bracketing indices + interpolation weight in log space."""
+        lx = math.log(max(x, 1e-12))
+        lg = np.log(grid)
+        if lx <= lg[0]:
+            return 0, 0, 0.0
+        if lx >= lg[-1]:
+            return len(grid) - 1, len(grid) - 1, 0.0
+        j = int(np.searchsorted(lg, lx)) - 1
+        w = (lx - lg[j]) / (lg[j + 1] - lg[j])
+        return j, j + 1, w
+
+    def interp(self, m: float, n: float) -> Tuple[float, float, float, float]:
+        """Bilinear (in log m, log n) -> (tp_tok, td_tok, util_pf, util_dec)."""
+        i0, i1, wm = self._coords(self.m_grid, m)
+        j0, j1, wn = self._coords(self.n_grid, n)
+
+        def bil(a: np.ndarray) -> float:
+            top = a[i0, j0] * (1 - wn) + a[i0, j1] * wn
+            bot = a[i1, j0] * (1 - wn) + a[i1, j1] * wn
+            return float(top * (1 - wm) + bot * wm)
+
+        return (bil(self.tp_tok), bil(self.td_tok),
+                bil(self.util_prefill), bil(self.util_decode))
+
+
+class TableOracle:
+    """Phase times by bilinear interpolation over (m, n) log-grids.
+
+    Tables are keyed by (system name, batch) and built lazily from ``base``
+    (default: the analytic oracle) — or injected via ``add_table`` when they
+    come from measurements. One oracle serves one ``ModelConfig``.
+    """
+
+    name = "table"
+
+    def __init__(self, cfg: ModelConfig, base: Optional[PerfOracle] = None, *,
+                 m_grid: Optional[Sequence[float]] = None,
+                 n_grid: Optional[Sequence[float]] = None):
+        self.cfg = cfg
+        self.base: PerfOracle = base if base is not None else AnalyticOracle()
+        self.m_grid = np.asarray(m_grid if m_grid is not None
+                                 else default_grid(), dtype=float)
+        self.n_grid = np.asarray(n_grid if n_grid is not None
+                                 else default_grid(), dtype=float)
+        self._tables: Dict[Tuple[SystemProfile, int], PhaseTable] = {}
+        self.version = 0        # bumped on mutation so CostModel memos refresh
+
+    def add_table(self, system: SystemProfile, table: PhaseTable,
+                  batch: int = 1) -> None:
+        self._tables[(system, batch)] = table
+        self.version += 1
+
+    def _build(self, system: SystemProfile, batch: int) -> PhaseTable:
+        M, N = len(self.m_grid), len(self.n_grid)
+        tp = np.zeros((M, N))
+        td = np.zeros((M, N))
+        up = np.zeros((M, N))
+        ud = np.zeros((M, N))
+        for i, m in enumerate(self.m_grid):
+            for j, n in enumerate(self.n_grid):
+                ph = self.base.phases(self.cfg, int(m), int(n), system, batch)
+                tp[i, j] = ph.t_prefill / max(m, 1.0)
+                td[i, j] = ph.t_decode / max(n, 1.0)
+                up[i, j] = ph.util_prefill
+                ud[i, j] = ph.util_decode
+        oh = self.base.phases(self.cfg, int(self.m_grid[0]),
+                              int(self.n_grid[0]), system, batch).t_overhead
+        return PhaseTable(self.m_grid, self.n_grid, tp, td, up, ud, oh)
+
+    def phases(self, cfg: ModelConfig, m: int, n: int, system: SystemProfile,
+               batch: int = 1) -> QueryPhases:
+        if cfg != self.cfg:
+            raise ValueError(f"TableOracle built for {self.cfg.name!r}, "
+                             f"asked to price {cfg.name!r} (or a same-name "
+                             "variant with different dimensions)")
+        key = (system, batch)
+        table = self._tables.get(key)
+        if table is None:
+            table = self._build(system, batch)
+            self._tables[key] = table
+        tp_tok, td_tok, up, ud = table.interp(m, n)
+        return QueryPhases(t_prefill=tp_tok * m, t_decode=td_tok * n,
+                           t_overhead=table.t_overhead,
+                           util_prefill=up, util_decode=ud)
+
+    def __repr__(self) -> str:
+        return (f"TableOracle(cfg={self.cfg.name!r}, "
+                f"grid={len(self.m_grid)}x{len(self.n_grid)}, "
+                f"tables={len(self._tables)})")
+
+
+# --------------------------------------------------------- calibrated oracle
+@dataclass(frozen=True)
+class KernelSample:
+    """One measured kernel invocation, with its analytic work counts.
+
+    ``flops``/``bytes`` are the kernel's arithmetic and memory traffic for the
+    timed shape; ``ctx`` is the context length that drives the profile's
+    saturation degradation (0 for context-independent kernels such as the
+    SSD scan, whose running state is constant-size).
+    """
+    kernel: str                 # "flash_attention" | "decode_attention" | "ssm_scan"
+    flops: float
+    bytes: float
+    ctx: float
+    t_s: float                  # measured wall seconds
+
+
+@dataclass(frozen=True)
+class Calibration:
+    """Fitted roofline constants for one ``SystemProfile``."""
+    profile: str
+    compute_eff: float
+    mem_eff: float
+    sat_ctx: Optional[float]
+    overhead_s: float
+    fit_rel_rmse: float         # sqrt(mean(((pred - t) / t)^2)) over samples
+    n_samples: int
+    source: str = "microbench"
+
+    def apply(self, system: SystemProfile) -> SystemProfile:
+        if system.name != self.profile:
+            raise ValueError(f"calibration for {self.profile!r} applied to "
+                             f"{system.name!r}")
+        return replace(system, compute_eff=self.compute_eff,
+                       mem_eff=self.mem_eff, sat_ctx=self.sat_ctx,
+                       overhead_s=self.overhead_s)
+
+
+def _predict(samples: Sequence[KernelSample], system: SystemProfile,
+             ce: float, me: float, sat: Optional[float],
+             overhead: float) -> np.ndarray:
+    f = np.array([s.flops for s in samples])
+    b = np.array([s.bytes for s in samples])
+    ctx = np.array([s.ctx for s in samples])
+    base = np.maximum(f / (system.instance_peak_flops * ce),
+                      b / (system.instance_hbm_bw * me))
+    if sat is not None:
+        base = base * (1.0 + ctx / sat)
+    return overhead + base
+
+
+def _rel_rmse(pred: np.ndarray, t: np.ndarray) -> float:
+    return float(np.sqrt(np.mean(((pred - t) / t) ** 2)))
+
+
+def fit_calibration(system: SystemProfile, samples: Sequence[KernelSample], *,
+                    fit_sat_ctx: bool = True,
+                    refine_rounds: int = 3) -> Calibration:
+    """Least-squares fit of (compute_eff, mem_eff, sat_ctx, overhead_s).
+
+    The model ``t = overhead + max(F/(peak*ce), B/(bw*me)) * (1 + ctx/sat)``
+    is nonlinear in (ce, me, sat), so those are found by a deterministic
+    coarse-to-fine log-grid search; ``overhead`` has a closed form given the
+    rest (weighted least squares on relative error, clipped at >= 0). The
+    objective is relative RMSE, so short and long kernels weigh equally.
+    """
+    if not samples:
+        raise ValueError("need at least one KernelSample to calibrate")
+    t = np.array([s.t_s for s in samples])
+    if np.any(t <= 0):
+        raise ValueError("measured times must be positive")
+
+    def overhead_for(ce: float, me: float, sat: Optional[float]) -> float:
+        base = _predict(samples, system, ce, me, sat, 0.0)
+        w = 1.0 / t ** 2
+        return float(max(0.0, np.sum(w * (t - base)) / np.sum(w)))
+
+    sat_grid: List[Optional[float]] = [None]
+    if fit_sat_ctx:
+        sat_grid += list(np.geomspace(32.0, 65536.0, 12))
+
+    ce_grid = np.geomspace(1e-6, 1.0, 25)
+    me_grid = np.geomspace(1e-6, 1.0, 25)
+    best = (float("inf"), 1.0, 1.0, None, 0.0)
+    for _ in range(1 + refine_rounds):
+        for ce in ce_grid:
+            for me in me_grid:
+                for sat in sat_grid:
+                    oh = overhead_for(ce, me, sat)
+                    err = _rel_rmse(_predict(samples, system, ce, me, sat, oh), t)
+                    if err < best[0]:
+                        best = (err, float(ce), float(me),
+                                None if sat is None else float(sat), oh)
+        # refine around the incumbent (keep sat candidates incl. None)
+        _, ce0, me0, sat0, _ = best
+        ce_grid = np.geomspace(ce0 / 3, min(1.0, ce0 * 3), 15)
+        me_grid = np.geomspace(me0 / 3, min(1.0, me0 * 3), 15)
+        if fit_sat_ctx and sat0 is not None:
+            sat_grid = [None] + list(np.geomspace(sat0 / 3, sat0 * 3, 9))
+
+    err, ce, me, sat, oh = best
+    return Calibration(profile=system.name, compute_eff=ce, mem_eff=me,
+                       sat_ctx=sat, overhead_s=oh, fit_rel_rmse=err,
+                       n_samples=len(samples))
+
+
+class CalibratedOracle:
+    """Analytic roofline with per-profile fitted constants.
+
+    Systems without a stored calibration fall back to their hand-tuned
+    constants (``strict=True`` raises instead), so one oracle can price a
+    mixed fleet where only some profiles have been measured.
+    """
+
+    name = "calibrated"
+
+    def __init__(self, calibrations: Iterable[Calibration] = (), *,
+                 strict: bool = False):
+        self.calibrations: Dict[str, Calibration] = {
+            c.profile: c for c in calibrations}
+        self.strict = strict
+        self._applied: Dict[SystemProfile, SystemProfile] = {}
+        self.version = 0        # bumped on mutation so CostModel memos refresh
+
+    def add(self, calibration: Calibration) -> None:
+        self.calibrations[calibration.profile] = calibration
+        self._applied = {s: a for s, a in self._applied.items()
+                         if s.name != calibration.profile}
+        self.version += 1
+
+    def resolve(self, system: SystemProfile) -> SystemProfile:
+        cal = self.calibrations.get(system.name)
+        if cal is None:
+            if self.strict:
+                raise KeyError(f"no calibration for profile {system.name!r}")
+            return system
+        hit = self._applied.get(system)
+        if hit is None:
+            hit = cal.apply(system)
+            self._applied[system] = hit
+        return hit
+
+    def phases(self, cfg: ModelConfig, m: int, n: int, system: SystemProfile,
+               batch: int = 1) -> QueryPhases:
+        return query_phases(cfg, m, n, self.resolve(system), batch)
+
+    # ------------------------------------------------------------- artifacts
+    def dump(self, path: str) -> None:
+        with open(path, "w") as f:
+            json.dump({"calibrations": [asdict(c) for c in
+                                        self.calibrations.values()]},
+                      f, indent=2, sort_keys=True)
+
+    @classmethod
+    def load(cls, path: str, *, strict: bool = False) -> "CalibratedOracle":
+        with open(path) as f:
+            data = json.load(f)
+        return cls([Calibration(**c) for c in data["calibrations"]],
+                   strict=strict)
+
+    def __repr__(self) -> str:
+        return f"CalibratedOracle(profiles={sorted(self.calibrations)})"
+
+
+# ---------------------------------------------------------------- cost model
+class CostModel:
+    """Single pricing front-end: Eq. 1 + normalizers + optional carbon term.
+
+    ``quant`` rounds (m, n) to multiples of that many tokens before the memo
+    lookup — set > 1 on simulation hot paths (fleet sweeps) to trade exact
+    per-query pricing for a high cache-hit rate. The default (1) is exact, so
+    every historical call path is reproduced bit-for-bit under the analytic
+    oracle.
+    """
+
+    def __init__(self, cfg: ModelConfig, oracle: Optional[PerfOracle] = None,
+                 cp: CostParams = CostParams(), *,
+                 carbon: Optional["CarbonProfile"] = None,
+                 quant: int = 1, memo_size: int = 65536):
+        if quant < 1:
+            raise ValueError(f"quant must be >= 1, got {quant}")
+        self.cfg = cfg
+        self.oracle: PerfOracle = oracle if oracle is not None else AnalyticOracle()
+        self.cp = cp
+        self.carbon = carbon
+        self.quant = int(quant)
+        self.memo_size = int(memo_size)
+        # keyed by the SystemProfile OBJECT (frozen/hashable), not its name:
+        # replace()-built variants sharing a name must not collide
+        self._memo: "OrderedDict[Tuple[SystemProfile, int, int, int], QueryPhases]" = \
+            OrderedDict()
+        self._oracle_version = getattr(self.oracle, "version", 0)
+        self.memo_hits = 0
+        self.memo_misses = 0
+
+    # ------------------------------------------------------------ construction
+    @classmethod
+    def normalized(cls, cfg: ModelConfig, ref: SystemProfile, lam: float, *,
+                   oracle: Optional[PerfOracle] = None, m: int = 128,
+                   n: int = 128, carbon: Optional["CarbonProfile"] = None,
+                   quant: int = 1) -> "CostModel":
+        """CostParams scaled so E and R are O(1) on ``ref`` at a
+        representative query size — lambda becomes a true preference."""
+        probe = cls(cfg, oracle)
+        cp = CostParams(lam=lam,
+                        e_norm=max(probe.energy(m, n, ref), 1e-9),
+                        r_norm=max(probe.runtime(m, n, ref), 1e-9))
+        return cls(cfg, probe.oracle, cp, carbon=carbon, quant=quant)
+
+    def with_params(self, cp: CostParams) -> "CostModel":
+        """Same oracle/memo policy, different Eq. 1 parameters."""
+        return CostModel(self.cfg, self.oracle, cp, carbon=self.carbon,
+                         quant=self.quant, memo_size=self.memo_size)
+
+    # ---------------------------------------------------------------- pricing
+    def _q(self, x: int) -> int:
+        # Small token counts stay exact (few distinct keys anyway, and a
+        # lognormal workload is densest there, where one bucket width is a
+        # large *relative* perturbation); only the sparse large values are
+        # bucketed, where quant/x is small.
+        if self.quant == 1 or x <= 8 * self.quant:
+            return int(x)
+        return max(1, int(round(x / self.quant)) * self.quant)
+
+    def phases(self, m: int, n: int, s: SystemProfile,
+               batch: int = 1) -> QueryPhases:
+        version = getattr(self.oracle, "version", 0)
+        if version != self._oracle_version:   # oracle mutated (new tables /
+            self._memo.clear()                # calibrations): drop stale phases
+            self._oracle_version = version
+        key = (s, self._q(m), self._q(n), batch)
+        hit = self._memo.get(key)
+        if hit is not None:
+            self.memo_hits += 1
+            self._memo.move_to_end(key)
+            return hit
+        self.memo_misses += 1
+        ph = self.oracle.phases(self.cfg, key[1], key[2], s, batch)
+        self._memo[key] = ph
+        if len(self._memo) > self.memo_size:
+            self._memo.popitem(last=False)
+        return ph
+
+    def runtime(self, m: int, n: int, s: SystemProfile, batch: int = 1) -> float:
+        """R(m, n, s) in seconds (Eq. 1's runtime term)."""
+        return self.phases(m, n, s, batch).total
+
+    def energy(self, m: int, n: int, s: SystemProfile, batch: int = 1) -> float:
+        """E(m, n, s) in joules (Eq. 1's energy term)."""
+        ph = self.phases(m, n, s, batch)
+        e = ph.t_prefill * s.power(ph.util_prefill)
+        e += ph.t_decode * s.power(ph.util_decode)
+        e += ph.t_overhead * s.power(0.0)
+        return e
+
+    def cost(self, m: int, n: int, s: SystemProfile, *, batch: int = 1,
+             wait_s: float = 0.0, t_exec: Optional[float] = None) -> float:
+        """U = lam*E/e_norm + (1-lam)*R/r_norm, plus optional terms:
+
+        * ``wait_s``  — queueing delay priced on the runtime side (the
+          capacity-aware policies' objective);
+        * ``t_exec``  — when a ``CarbonProfile`` is attached, modulates the
+          energy term by CI(t_exec)/CI_mean so lambda trades *carbon*
+          against runtime while the normalizers keep their meaning.
+        """
+        cp = self.cp
+        eterm = self.energy(m, n, s, batch) / cp.e_norm
+        if t_exec is not None and self.carbon is not None:
+            eterm *= (self.carbon.intensity(t_exec)
+                      / self.carbon.mean_g_per_kwh)
+        rterm = self.runtime(m, n, s, batch) / cp.r_norm
+        c = cp.lam * eterm + (1.0 - cp.lam) * rterm
+        if wait_s:
+            c += (1.0 - cp.lam) * wait_s / cp.r_norm
+        return c
+
+    def wait_cost(self, wait_s: float) -> float:
+        """The runtime-side price of queueing delay alone."""
+        return (1.0 - self.cp.lam) * wait_s / self.cp.r_norm
+
+    def grams(self, m: int, n: int, s: SystemProfile, t_exec: float,
+              batch: int = 1) -> float:
+        """gCO2 for executing (m, n) on s at time t_exec (requires carbon)."""
+        if self.carbon is None:
+            raise ValueError("CostModel has no CarbonProfile attached")
+        return self.carbon.grams(self.energy(m, n, s, batch), t_exec)
+
+    # ------------------------------------------------------------------ misc
+    def memo_info(self) -> Dict[str, int]:
+        return {"size": len(self._memo), "hits": self.memo_hits,
+                "misses": self.memo_misses, "quant": self.quant}
+
+    def clear_memo(self) -> None:
+        self._memo.clear()
+        self.memo_hits = self.memo_misses = 0
+
+    def __repr__(self) -> str:
+        return (f"CostModel(cfg={self.cfg.name!r}, oracle={self.oracle!r}, "
+                f"lam={self.cp.lam}, quant={self.quant})")
+
+
+# ----------------------------------------------------------- default pricing
+_DEFAULT_MODELS: "OrderedDict[ModelConfig, CostModel]" = OrderedDict()
+_DEFAULT_CACHE = 16
+
+
+def default_cost_model(cfg: ModelConfig) -> CostModel:
+    """Process-wide analytic CostModel per config — backs the deprecation
+    shims (``core.energy.energy``, ``core.cost.cost``, ...) so legacy free
+    functions share one memo instead of re-deriving phases per call. Keyed by
+    the (frozen, hashable) config OBJECT: ``cfg.reduced()`` keeps ``name``,
+    so a name key would hand the reduced model the full model's prices."""
+    model = _DEFAULT_MODELS.get(cfg)
+    if model is None:
+        model = CostModel(cfg, AnalyticOracle())
+        _DEFAULT_MODELS[cfg] = model
+        if len(_DEFAULT_MODELS) > _DEFAULT_CACHE:
+            _DEFAULT_MODELS.popitem(last=False)
+    else:
+        _DEFAULT_MODELS.move_to_end(cfg)
+    return model

@@ -9,6 +9,12 @@
     so bursts spill to the other pool instead of queueing indefinitely.
   * Baselines — workload-unaware policies the paper compares against.
 
+Every scheduler prices queries through one ``CostModel`` (``core.pricing``):
+pass ``model=`` to swap the perf oracle (analytic / table / calibrated) for
+every policy at once; the default is the analytic oracle at the scheduler's
+``CostParams``, which reproduces the historical free-function pricing
+bit-for-bit.
+
 Every scheduler exposes a uniform online API used by the discrete-event
 fleet simulator (``core/fleet.py``) and the serving router:
 
@@ -16,19 +22,19 @@ fleet simulator (``core/fleet.py``) and the serving router:
 
 ``fleet_state`` is a ``FleetState`` snapshot (per-pool queue depths, busy
 instances, estimated wait). Workload-only policies ignore it; queue-aware
-policies price the wait in. The legacy offline ``assign(queries)`` path is
-kept for the paper's static Section 6 accounting.
+policies price the wait in. ``dispatch`` is pure — stateful policies
+(reservation heaps, round-robin counters) mutate only in ``observe``, which
+callers invoke after committing to the returned system. The legacy offline
+``assign(queries)`` path is kept for the paper's static Section 6 accounting.
 """
 from __future__ import annotations
 
 import heapq
 from dataclasses import dataclass, field
-from typing import Dict, List, Optional, Sequence
+from typing import Dict, List, Optional, Sequence, Tuple
 
 from repro.configs.base import ModelConfig
-from repro.core.cost import CostParams, cost
-from repro.core.energy import energy
-from repro.core.perf_model import runtime
+from repro.core.pricing import AnalyticOracle, CostModel, CostParams
 from repro.core.systems import SystemProfile
 from repro.core.workload import Query
 
@@ -78,28 +84,44 @@ class FleetState:
 
 class Scheduler:
     """Assigns each query to a system. Subclasses override ``choose``
-    (workload-only decision) and optionally ``dispatch`` (queue-aware)."""
+    (workload-only decision) and optionally ``dispatch`` (queue-aware) and
+    ``observe`` (post-commit state update)."""
 
     def __init__(self, cfg: ModelConfig, systems: Sequence[SystemProfile],
-                 cp: CostParams = CostParams()):
+                 cp: CostParams = CostParams(), *,
+                 model: Optional[CostModel] = None):
         self.cfg = cfg
         self.systems = list(systems)
-        self.cp = cp
+        if model is not None and cp != CostParams() and cp != model.cp:
+            raise ValueError(
+                "conflicting pricing: both cp= and model= were given and "
+                f"disagree ({cp} vs {model.cp}); build the model with the "
+                "intended CostParams (model.with_params(cp))")
+        self.model = model if model is not None \
+            else CostModel(cfg, AnalyticOracle(), cp)
+        self.cp = self.model.cp
 
     def choose(self, q: Query) -> SystemProfile:
         raise NotImplementedError
 
     def dispatch(self, q: Query, fleet: Optional[FleetState] = None) -> SystemProfile:
         """Online dispatch under identical queueing dynamics for every policy.
-        Default: the workload-only ``choose`` rule, ignoring fleet state."""
+        Default: the workload-only ``choose`` rule, ignoring fleet state.
+        Must be side-effect free; state updates belong in ``observe``."""
         return self.choose(q)
+
+    def observe(self, q: Query, system: SystemProfile) -> None:
+        """Commit hook: the caller routed ``q`` to ``system``. Stateful
+        policies (reservation heaps, counters) update internal state here —
+        never in ``choose``/``dispatch``."""
 
     def assign(self, queries: Sequence[Query]) -> List[Assignment]:
         out = []
         for q in queries:
             s = self.choose(q)
-            out.append(Assignment(q, s, energy(self.cfg, q.m, q.n, s),
-                                  runtime(self.cfg, q.m, q.n, s)))
+            self.observe(q, s)
+            out.append(Assignment(q, s, self.model.energy(q.m, q.n, s),
+                                  self.model.runtime(q.m, q.n, s)))
         return out
 
 
@@ -109,8 +131,9 @@ class ThresholdScheduler(Scheduler):
 
     def __init__(self, cfg, eff: SystemProfile, perf: SystemProfile, *,
                  t_in: int = 32, t_out: int = 32, axis: str = "in",
-                 cp: CostParams = CostParams()):
-        super().__init__(cfg, [eff, perf], cp)
+                 cp: CostParams = CostParams(),
+                 model: Optional[CostModel] = None):
+        super().__init__(cfg, [eff, perf], cp, model=model)
         self.eff, self.perf = eff, perf
         self.t_in, self.t_out, self.axis = t_in, t_out, axis
 
@@ -129,7 +152,7 @@ class CostOptimalScheduler(Scheduler):
 
     def choose(self, q: Query) -> SystemProfile:
         return min(self.systems,
-                   key=lambda s: cost(self.cfg, q.m, q.n, s, self.cp))
+                   key=lambda s: self.model.cost(q.m, q.n, s))
 
 
 @dataclass
@@ -143,52 +166,73 @@ class CapacityAwareScheduler(Scheduler):
 
     Greedy event-driven assignment in arrival order: each pool keeps a heap of
     instance-free times; candidate cost = lam*E + (1-lam)*(wait + R).
+
+    ``choose``/``dispatch`` are pure — they price the heap (or the fleet
+    snapshot) read-only. The reservation itself happens in ``observe`` (or
+    the offline ``reserve``/``assign`` path), so pricing with a snapshot and
+    later falling back without one can no longer double-book instances.
     """
 
     def __init__(self, cfg, systems: Sequence[SystemProfile],
-                 counts: Dict[str, int], cp: CostParams = CostParams()):
-        super().__init__(cfg, systems, cp)
+                 counts: Dict[str, int], cp: CostParams = CostParams(), *,
+                 model: Optional[CostModel] = None):
+        super().__init__(cfg, systems, cp, model=model)
         self.pools = {s.name: _Pool(s, [0.0] * counts.get(s.name, 1))
                       for s in systems}
         for p in self.pools.values():
             heapq.heapify(p.free_at)
 
-    def _assign_one(self, q: Query) -> Assignment:
-        best, best_c, best_wait, best_r, best_e = None, float("inf"), 0.0, 0.0, 0.0
+    def _price(self, q: Query) -> Tuple[_Pool, float, float, float]:
+        """Pure pricing against the internal reservation heaps:
+        (best pool, wait_s, runtime_s, energy_j). Does not mutate."""
+        best, best_c, best_wait, best_r, best_e = \
+            None, float("inf"), 0.0, 0.0, 0.0
         for p in self.pools.values():
-            r = runtime(self.cfg, q.m, q.n, p.system)
-            e = energy(self.cfg, q.m, q.n, p.system)
+            r = self.model.runtime(q.m, q.n, p.system)
+            e = self.model.energy(q.m, q.n, p.system)
             wait = max(0.0, p.free_at[0] - q.arrival_s)
-            c = (self.cp.lam * e / self.cp.e_norm
-                 + (1 - self.cp.lam) * (wait + r) / self.cp.r_norm)
+            c = self.model.cost(q.m, q.n, p.system, wait_s=wait)
             if c < best_c:
                 best, best_c, best_wait, best_r, best_e = p, c, wait, r, e
-        start = max(q.arrival_s, best.free_at[0])
-        heapq.heapreplace(best.free_at, start + best_r)
-        return Assignment(q, best.system, best_e, best_r, best_wait)
+        return best, best_wait, best_r, best_e
+
+    def reserve(self, q: Query) -> Assignment:
+        """Price AND book the chosen instance (offline assignment path)."""
+        pool, wait, r, e = self._price(q)
+        start = max(q.arrival_s, pool.free_at[0])
+        heapq.heapreplace(pool.free_at, start + r)
+        return Assignment(q, pool.system, e, r, wait)
 
     def choose(self, q: Query) -> SystemProfile:
-        """Online single-query dispatch (stateful: reserves the instance)."""
-        return self._assign_one(q).system
+        """Online single-query decision. Pure: see ``observe``."""
+        return self._price(q)[0].system
+
+    def observe(self, q: Query, system: SystemProfile) -> None:
+        """Book the committed system's earliest-free instance."""
+        pool = self.pools.get(system.name)
+        if pool is None:
+            return
+        start = max(q.arrival_s, pool.free_at[0])
+        heapq.heapreplace(pool.free_at,
+                          start + self.model.runtime(q.m, q.n, system))
 
     def dispatch(self, q: Query, fleet: Optional[FleetState] = None) -> SystemProfile:
         """Queue-aware dispatch: price each pool's *observed* estimated wait
-        (from the fleet snapshot) into the Eq. 1 cost. Falls back to the
-        internal reservation heap when no snapshot is provided."""
+        (from the fleet snapshot) into the Eq. 1 cost. Without a snapshot the
+        internal reservation heap is read (not written) for the wait."""
         if fleet is None:
             return self.choose(q)
         best, best_c = None, float("inf")
         for s in self.systems:
             snap = fleet.for_system(s)
             wait = snap.est_wait_s if snap is not None else 0.0
-            c = (cost(self.cfg, q.m, q.n, s, self.cp)
-                 + (1 - self.cp.lam) * wait / self.cp.r_norm)
+            c = self.model.cost(q.m, q.n, s, wait_s=wait)
             if c < best_c:
                 best, best_c = s, c
         return best
 
     def assign(self, queries: Sequence[Query]) -> List[Assignment]:
-        return [self._assign_one(q)
+        return [self.reserve(q)
                 for q in sorted(queries, key=lambda q: q.arrival_s)]
 
 
@@ -196,8 +240,9 @@ class CapacityAwareScheduler(Scheduler):
 class SingleSystemScheduler(Scheduler):
     """Workload-unaware: everything on one system (paper's dashed lines)."""
 
-    def __init__(self, cfg, system: SystemProfile, cp: CostParams = CostParams()):
-        super().__init__(cfg, [system], cp)
+    def __init__(self, cfg, system: SystemProfile, cp: CostParams = CostParams(),
+                 *, model: Optional[CostModel] = None):
+        super().__init__(cfg, [system], cp, model=model)
         self.system = system
 
     def choose(self, q: Query) -> SystemProfile:
@@ -208,11 +253,13 @@ class RoundRobinScheduler(Scheduler):
     """Workload-unaware hybrid baseline: alternate pools ignoring (m, n)."""
 
     def __init__(self, cfg, systems: Sequence[SystemProfile],
-                 cp: CostParams = CostParams()):
-        super().__init__(cfg, systems, cp)
+                 cp: CostParams = CostParams(), *,
+                 model: Optional[CostModel] = None):
+        super().__init__(cfg, systems, cp, model=model)
         self._i = 0
 
     def choose(self, q: Query) -> SystemProfile:
-        s = self.systems[self._i % len(self.systems)]
+        return self.systems[self._i % len(self.systems)]
+
+    def observe(self, q: Query, system: SystemProfile) -> None:
         self._i += 1
-        return s

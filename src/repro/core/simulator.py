@@ -13,9 +13,7 @@ from typing import Callable, Dict, List, Optional, Sequence
 import numpy as np
 
 from repro.configs.base import ModelConfig
-from repro.core.cost import CostParams
-from repro.core.energy import energy
-from repro.core.perf_model import runtime
+from repro.core.pricing import CostModel
 from repro.core.scheduler import (Assignment, Scheduler, SingleSystemScheduler,
                                   ThresholdScheduler)
 from repro.core.systems import SystemProfile
@@ -69,7 +67,8 @@ class SweepPoint:
 def threshold_sweep(cfg: ModelConfig, queries: Sequence[Query],
                     eff: SystemProfile, perf: SystemProfile, *,
                     axis: str = "in", thresholds: Sequence[int] = (),
-                    paper_faithful: bool = True) -> List[SweepPoint]:
+                    paper_faithful: bool = True,
+                    model: Optional[CostModel] = None) -> List[SweepPoint]:
     """Paper Eqs. 9-10: total energy/runtime as a function of the cutoff.
 
     paper_faithful=True replicates the paper's methodology exactly: the
@@ -89,7 +88,8 @@ def threshold_sweep(cfg: ModelConfig, queries: Sequence[Query],
                    else Query(32, q.n, q.arrival_s) for q in queries]
     out = []
     for t in thresholds:
-        sch = ThresholdScheduler(cfg, eff, perf, t_in=t, t_out=t, axis=axis)
+        sch = ThresholdScheduler(cfg, eff, perf, t_in=t, t_out=t, axis=axis,
+                                 model=model)
         r = simulate(cfg, queries, sch, f"threshold_{axis}={t}")
         out.append(SweepPoint(t, r.total_energy_j, r.total_runtime_s))
     return out
@@ -112,7 +112,8 @@ class HeadlineResult:
 
 def headline(cfg: ModelConfig, queries: Sequence[Query], eff: SystemProfile,
              perf: SystemProfile, *, t_in: int = 32, axis: str = "in",
-             paper_faithful: bool = True) -> HeadlineResult:
+             paper_faithful: bool = True,
+             model: Optional[CostModel] = None) -> HeadlineResult:
     """Hybrid threshold policy vs workload-unaware baselines (paper's 7.5%).
 
     paper_faithful pins the counterpart token dimension to 32, replicating the
@@ -126,11 +127,15 @@ def headline(cfg: ModelConfig, queries: Sequence[Query], eff: SystemProfile,
                    else Query(32, q.n, q.arrival_s) for q in queries]
     hybrid = simulate(cfg, queries,
                       ThresholdScheduler(cfg, eff, perf, t_in=t_in, t_out=t_in,
-                                         axis=axis),
+                                         axis=axis, model=model),
                       f"hybrid_T{axis}={t_in}")
     baselines = {
-        "all_perf": simulate(cfg, queries, SingleSystemScheduler(cfg, perf), "all_perf"),
-        "all_eff": simulate(cfg, queries, SingleSystemScheduler(cfg, eff), "all_eff"),
+        "all_perf": simulate(cfg, queries,
+                             SingleSystemScheduler(cfg, perf, model=model),
+                             "all_perf"),
+        "all_eff": simulate(cfg, queries,
+                            SingleSystemScheduler(cfg, eff, model=model),
+                            "all_eff"),
     }
     best = min(baselines, key=lambda k: baselines[k].total_energy_j)
     eb = baselines[best].total_energy_j

@@ -14,7 +14,7 @@ power to peak and on per-query software overhead, not on exact wattages.
 from __future__ import annotations
 
 from dataclasses import dataclass, replace
-from typing import Dict, Tuple
+from typing import Dict, Optional, Tuple
 
 
 @dataclass(frozen=True)
@@ -37,7 +37,7 @@ class SystemProfile:
     # the paper's Fig 1a/2a observation that the M1-Pro's runtime escalates
     # "with the most significant magnitude" and it cannot generate >512 tokens
     # without "significant runtime penalties".
-    sat_ctx: float = None     # type: ignore[assignment]
+    sat_ctx: Optional[float] = None
     max_out_tokens: int = 0   # advisory output cap (0 = unlimited)
 
     def degradation(self, ctx: float) -> float:

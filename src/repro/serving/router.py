@@ -2,12 +2,14 @@
 
 A fleet is a set of *pools*; each pool is (SystemProfile, engine-or-batcher,
 instance count). Incoming requests carry (m, expected_n); the router prices
-them with the core cost model and dispatches through the same uniform
-``Scheduler.dispatch(query, fleet_state)`` API the discrete-event fleet
-simulator uses — so a policy validated in simulation drops into serving
-unchanged. Execution on this CPU container is functional (every pool runs
-the same JAX engine); energy/runtime are accounted analytically per the
-assigned pool's profile — exactly the quantity the paper optimizes.
+them with the unified ``CostModel`` (``core.pricing``) and dispatches through
+the same uniform ``Scheduler.dispatch(query, fleet_state)`` API the
+discrete-event fleet simulator uses — so a policy validated in simulation
+drops into serving unchanged, and swapping the perf oracle (analytic / table
+/ calibrated) re-prices serving decisions in one place. Execution on this
+CPU container is functional (every pool runs the same JAX engine);
+energy/runtime are accounted analytically per the assigned pool's profile —
+exactly the quantity the paper optimizes.
 
 Execution backends per pool:
   * engine  — immediate, blocking ``generate`` per request;
@@ -22,9 +24,7 @@ from typing import Dict, List, Optional, Sequence
 import numpy as np
 
 from repro.configs.base import ModelConfig
-from repro.core.cost import CostParams
-from repro.core.energy import energy
-from repro.core.perf_model import runtime
+from repro.core.pricing import CostModel, CostParams, PerfOracle
 from repro.core.scheduler import (CapacityAwareScheduler, CostOptimalScheduler,
                                   FleetState, PoolSnapshot, Scheduler,
                                   ThresholdScheduler)
@@ -57,7 +57,9 @@ class FleetRouter:
                  engines: Optional[Dict[str, InferenceEngine]] = None, *,
                  policy: str = "threshold", t_in: int = 32, t_out: int = 32,
                  axis: str = "in", lam: float = 1.0,
-                 counts: Optional[Dict[str, int]] = None):
+                 counts: Optional[Dict[str, int]] = None,
+                 oracle: Optional[PerfOracle] = None,
+                 model: Optional[CostModel] = None):
         self.cfg = cfg
         self.pools = pools
         self.engines = engines or {}
@@ -65,16 +67,26 @@ class FleetRouter:
         self.counts = counts or {s.name: 1 for s in pools.values()}
         self.stats = {name: PoolStats() for name in pools}
         systems = list(pools.values())
-        cp = CostParams(lam=lam)
+        if model is not None:
+            if oracle is not None:
+                raise ValueError("pass either model= or oracle=, not both "
+                                 "(the model already carries its oracle)")
+            if lam != 1.0 and lam != model.cp.lam:
+                raise ValueError(f"conflicting lam: lam={lam} but the given "
+                                 f"model prices with lam={model.cp.lam}")
+        else:
+            model = CostModel(cfg, oracle, CostParams(lam=lam))
+        self.model = model
         if policy == "threshold":
             eff = next(s for s in systems if s.kind == "eff")
             perf = next(s for s in systems if s.kind == "perf")
             self.scheduler: Scheduler = ThresholdScheduler(
-                cfg, eff, perf, t_in=t_in, t_out=t_out, axis=axis, cp=cp)
+                cfg, eff, perf, t_in=t_in, t_out=t_out, axis=axis, model=model)
         elif policy == "cost_optimal":
-            self.scheduler = CostOptimalScheduler(cfg, systems, cp)
+            self.scheduler = CostOptimalScheduler(cfg, systems, model=model)
         elif policy == "capacity_aware":
-            self.scheduler = CapacityAwareScheduler(cfg, systems, self.counts, cp)
+            self.scheduler = CapacityAwareScheduler(cfg, systems, self.counts,
+                                                    model=model)
         else:
             raise ValueError(policy)
         self._name_of = {s.name: n for n, s in pools.items()}
@@ -103,8 +115,9 @@ class FleetRouter:
             if cb is not None:
                 busy = sum(1 for r in cb.active if r is not None)
                 queue_len = len(cb.queue)
-                backlog = sum(runtime(self.cfg, len(r.tokens), r.max_new_tokens,
-                                      sysp) for r in cb.queue)
+                backlog = sum(self.model.runtime(len(r.tokens),
+                                                 r.max_new_tokens, sysp)
+                              for r in cb.queue)
                 est_wait = backlog / max(1, slots)
             snaps[name] = PoolSnapshot(
                 system=sysp, instances=self.counts.get(sysp.name, 1),
@@ -124,11 +137,12 @@ class FleetRouter:
         if self.batchers and type(self.scheduler).dispatch is not Scheduler.dispatch:
             fleet = self._fleet_state(arrival_s)
         sys = self.scheduler.dispatch(q, fleet)
+        self.scheduler.observe(q, sys)
         name = self._name_of[sys.name]
         st = self.stats[name]
         st.queries += 1
-        st.energy_j += energy(self.cfg, m, expected_n, sys)
-        st.runtime_s += runtime(self.cfg, m, expected_n, sys)
+        st.energy_j += self.model.energy(m, expected_n, sys)
+        st.runtime_s += self.model.runtime(m, expected_n, sys)
         st.tokens += m + expected_n
         return name
 
@@ -156,8 +170,8 @@ class FleetRouter:
             out = res.tokens[0]
         sysp = self.pools[name]
         return RoutedRequest(self._rid, name,
-                             energy(self.cfg, len(tokens), max_new_tokens, sysp),
-                             runtime(self.cfg, len(tokens), max_new_tokens, sysp),
+                             self.model.energy(len(tokens), max_new_tokens, sysp),
+                             self.model.runtime(len(tokens), max_new_tokens, sysp),
                              out, req)
 
     def drain(self, max_ticks: int = 10_000) -> None:

@@ -40,3 +40,73 @@ def test_deferral_bounded():
     sched = CarbonAwareScheduler(CFG, [EFF, PERF], max_defer_s=3600.0)
     a = sched.assign([Query(64, 512, arrival_s=20 * 3600.0)])[0]
     assert a.wait_s <= 3600.0
+
+
+# ------------------------------------------------------- satellite regression
+def test_carbon_scheduler_dispatches_in_fleet_simulator():
+    """Satellite regression: CarbonAwareScheduler used to crash with
+    NotImplementedError inside core/fleet.py (no choose/dispatch). It must
+    run under the online dispatch API like every other policy."""
+    from repro.core import PoolSpec, simulate_fleet
+    qs = [Query(16, 16, float(i)) for i in range(5)] + \
+         [Query(64, 512, float(i)) for i in range(5)]
+    res = simulate_fleet(
+        CFG, qs,
+        {"eff": PoolSpec(EFF, 2, 1), "perf": PoolSpec(PERF, 2, 1)},
+        CarbonAwareScheduler(CFG, [EFF, PERF]))
+    assert len(res.records) == len(qs)
+    assert all(r.t_done >= r.t_arrival for r in res.records)
+
+
+def test_carbon_dispatch_uses_snapshot_clock():
+    """The route-now vs defer decision reads the fleet snapshot's clock: a
+    deferrable query is priced at the next green window seen from *that*
+    clock, an interactive one at the clock itself."""
+    from repro.core import FleetState
+    cp = CarbonProfile()
+    sched = CarbonAwareScheduler(CFG, [EFF, PERF], cp,
+                                 defer_out_threshold=256)
+    peak = 1 * 3600.0                       # carbon peak (trough + 12h)
+    batch_q = Query(64, 512, arrival_s=0.0)     # deferrable
+    chat_q = Query(16, 16, arrival_s=0.0)       # interactive
+    state = FleetState(time_s=peak)
+    # deferrable: decision matches the greenest system at the green window
+    t_green = sched._next_green_window(peak)
+    assert cp.intensity(t_green) < cp.intensity(peak)
+    want = min([EFF, PERF],
+               key=lambda s: sched.model.grams(batch_q.m, batch_q.n, s, t_green))
+    assert sched.dispatch(batch_q, state).name == want.name
+    # interactive: priced at the snapshot clock itself
+    want_now = min([EFF, PERF],
+                   key=lambda s: sched.model.grams(chat_q.m, chat_q.n, s, peak))
+    assert sched.dispatch(chat_q, state).name == want_now.name
+    # without a snapshot the query's own arrival clock is used
+    assert sched.dispatch(chat_q).name == min(
+        [EFF, PERF], key=lambda s: sched.model.grams(
+            chat_q.m, chat_q.n, s, chat_q.arrival_s)).name
+
+
+def test_carbon_scheduler_rejects_conflicting_profiles():
+    """An explicit carbon= that disagrees with a carbon-bearing model= must
+    raise, not silently lose (mirrors the cp=/model= and oracle=/model=
+    conflict checks)."""
+    import pytest
+    from repro.core import CostModel
+    with pytest.raises(ValueError):
+        CarbonAwareScheduler(
+            CFG, [EFF, PERF], CarbonProfile(trough_hour=2.0),
+            model=CostModel(CFG, carbon=CarbonProfile()))
+
+
+def test_carbon_scheduler_adopts_model_profile():
+    """A CostModel passed in with its own CarbonProfile is authoritative:
+    window planning and pricing must read the same curve."""
+    from repro.core import CostModel
+    shifted = CarbonProfile(trough_hour=2.0)
+    sched = CarbonAwareScheduler(
+        CFG, [EFF, PERF], model=CostModel(CFG, carbon=shifted))
+    assert sched.carbon is shifted
+    assert sched.model.carbon is shifted
+    # green window from the shifted curve, not the 13:00 default
+    t = sched._next_green_window(22 * 3600.0)
+    assert shifted.intensity(t) <= shifted.mean_g_per_kwh * sched.defer_below

@@ -176,6 +176,39 @@ else:
         check_cost_is_convex_combination(m, n, lam)
 
 
+def test_capacity_aware_dispatch_pure_wrt_reservation_heap():
+    """Satellite regression: ``choose``/``dispatch`` must NOT mutate the
+    reservation heap (previously ``choose`` reserved as a side effect, so
+    snapshot-dispatch followed by a no-snapshot fallback double-booked).
+    Reservation is an explicit ``observe``/``reserve`` step."""
+    from repro.core import FleetState, PoolSnapshot
+    sched = CapacityAwareScheduler(CFG, [EFF, PERF],
+                                   counts={EFF.name: 2, PERF.name: 1})
+    heaps = {k: list(p.free_at) for k, p in sched.pools.items()}
+    q = Query(8, 8, 1.0)
+    snap = FleetState(pools={
+        "eff": PoolSnapshot(system=EFF, est_wait_s=3.0),
+        "perf": PoolSnapshot(system=PERF, est_wait_s=0.0)})
+    for _ in range(3):                       # repeated pricing, either path
+        sched.dispatch(q, snap)
+        sched.dispatch(q, None)
+        sched.choose(q)
+    assert {k: list(p.free_at) for k, p in sched.pools.items()} == heaps
+    # observe commits exactly one booking on the committed system
+    s = sched.dispatch(q, None)
+    sched.observe(q, s)
+    booked = {k: list(p.free_at) for k, p in sched.pools.items()}
+    assert booked != heaps
+    changed = [k for k in heaps if booked[k] != heaps[k]]
+    assert changed == [s.name]
+    # the offline path (assign/reserve) still books sequentially
+    waits = [a.wait_s for a in
+             CapacityAwareScheduler(CFG, [EFF, PERF],
+                                    counts={EFF.name: 1, PERF.name: 1}
+                                    ).assign([Query(64, 64, 0.0)] * 6)]
+    assert any(w > 0 for w in waits)
+
+
 def test_single_system_baseline_consistency():
     qs = [Query(10, 10), Query(1000, 200)]
     res = simulate(CFG, qs, SingleSystemScheduler(CFG, PERF))
