@@ -20,3 +20,8 @@ python -m pytest -x -q
 # not just the benchmarks.
 python benchmarks/calibrate.py --synthetic --smoke
 python benchmarks/fleet_sweep.py --smoke
+
+# Paged-serving gate: the paged runtime (block tables + chunked prefill +
+# prefix sharing) must stay token-for-token identical to the dense batcher
+# and show non-zero block reuse on a shared-prefix workload.
+python benchmarks/paged_serving.py --smoke

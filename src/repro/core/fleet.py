@@ -49,7 +49,8 @@ import numpy as np
 
 from repro.configs.base import ModelConfig
 from repro.core.pricing import AnalyticOracle, CostModel
-from repro.core.scheduler import FleetState, PoolSnapshot, Scheduler
+from repro.core.scheduler import (FleetState, PoolSnapshot, Scheduler,
+                                  kv_blocks_needed)
 from repro.core.systems import SystemProfile
 from repro.core.workload import Query
 
@@ -60,10 +61,23 @@ ARRIVAL, INSTANCE = 0, 1      # event kinds (INSTANCE = batch-step/completion)
 @dataclass(frozen=True)
 class PoolSpec:
     """One pool: a system profile replicated ``instances`` times, each
-    instance running ``slots`` continuous-batching decode lanes."""
+    instance running ``slots`` continuous-batching decode lanes.
+
+    ``kv_blocks`` bounds each instance's KV memory in blocks of
+    ``block_size`` tokens (the paged serving runtime's unit): a request is
+    admitted only when its worst-case context ``ceil((m + n) / block_size)``
+    fits in the instance's free blocks, so decode occupancy is bounded by
+    memory, not just the slot count. 0 = unbounded (pre-paging behavior)."""
     system: SystemProfile
     instances: int = 1
     slots: int = 1
+    kv_blocks: int = 0
+    block_size: int = 16
+
+    def blocks_needed(self, q: Query) -> int:
+        if not self.kv_blocks:
+            return 0
+        return kv_blocks_needed(q.m + q.n, self.block_size)
 
 
 # --------------------------------------------------------------------- records
@@ -98,6 +112,7 @@ class PoolResult:
     idle_energy_j: float = 0.0
     busy_slot_seconds: float = 0.0
     utilization: float = 0.0      # busy slot-seconds / (slots * horizon)
+    peak_residents: int = 0       # max concurrent residents (occupancy bound)
 
 
 @dataclass
@@ -162,11 +177,12 @@ class FleetSimResult:
 
 # ------------------------------------------------------------------- internals
 class _Resident:
-    """A request occupying one slot of an instance."""
-    __slots__ = ("rec", "phases1", "rem_tokens", "prefill_end", "_t_tok")
+    """A request occupying one slot (and its KV blocks) of an instance."""
+    __slots__ = ("rec", "phases1", "rem_tokens", "prefill_end", "_t_tok",
+                 "blocks")
 
     def __init__(self, model: CostModel, rec: RequestRecord, s: SystemProfile,
-                 now: float):
+                 now: float, blocks: int = 0):
         self.rec = rec
         q = rec.query
         self.phases1 = model.phases(q.m, q.n, s, batch=1)
@@ -174,6 +190,7 @@ class _Resident:
         # decode group (ContinuousBatcher: prefill per-request, decode batched)
         self.prefill_end = now + self.phases1.t_overhead + self.phases1.t_prefill
         self.rem_tokens = float(q.n)
+        self.blocks = blocks
         self._t_tok: Dict[int, Tuple[float, float]] = {}
 
     def tok_time_util(self, model: CostModel, s: SystemProfile,
@@ -189,7 +206,7 @@ class _Resident:
 
 class _Instance:
     __slots__ = ("pool", "iid", "slots", "residents", "last_t", "version",
-                 "busy_slot_seconds")
+                 "busy_slot_seconds", "blocks_in_use")
 
     def __init__(self, pool: "_PoolRuntime", iid: int, slots: int):
         self.pool = pool
@@ -199,10 +216,19 @@ class _Instance:
         self.last_t = 0.0
         self.version = 0
         self.busy_slot_seconds = 0.0
+        self.blocks_in_use = 0
 
     @property
     def free_slots(self) -> int:
         return self.slots - len(self.residents)
+
+    @property
+    def free_blocks(self) -> int:
+        kv = self.pool.spec.kv_blocks
+        return kv - self.blocks_in_use if kv else 0
+
+    def fits(self, blocks: int) -> bool:
+        return not self.pool.spec.kv_blocks or blocks <= self.free_blocks
 
     def advance(self, model: CostModel, now: float) -> None:
         """Progress decode/prefill state from last_t to now.
@@ -253,6 +279,7 @@ class _Instance:
                 if r.rem_tokens <= 1e-6 and r.prefill_end <= now + 1e-12]
         for r in done:
             self.residents.remove(r)
+            self.blocks_in_use -= r.blocks
         return done
 
     def next_event_time(self, model: CostModel, now: float) -> Optional[float]:
@@ -294,6 +321,10 @@ class _PoolRuntime:
 
     def snapshot(self, model: CostModel, now: float) -> PoolSnapshot:
         busy = sum(len(i.residents) for i in self.instances)
+        kv = self.spec.kv_blocks
+        # per-instance admission terms (see PoolSnapshot): a request lands on
+        # ONE instance, so the admissibility signal is the most-free
+        # instance's headroom, not the pool aggregate
         return PoolSnapshot(
             system=self.spec.system,
             instances=self.spec.instances,
@@ -301,6 +332,9 @@ class _PoolRuntime:
             busy_slots=busy,
             queue_len=len(self.queue),
             est_wait_s=self.est_wait(model, now),
+            free_blocks=max(i.free_blocks for i in self.instances) if kv else None,
+            total_blocks=kv if kv else None,
+            block_size=self.spec.block_size if kv else 0,
         )
 
     def est_wait(self, model: CostModel, now: float) -> float:
@@ -367,6 +401,12 @@ class FleetSimulator:
             if kind == ARRIVAL:
                 rid, q = payload
                 pool = self._dispatch(q, t)
+                need = pool.spec.blocks_needed(q)
+                if need > pool.spec.kv_blocks > 0:
+                    raise ValueError(
+                        f"query (m={q.m}, n={q.n}) needs {need} KV blocks but "
+                        f"pool {pool.name!r} instances hold only "
+                        f"{pool.spec.kv_blocks}: it can never be admitted")
                 rec = RequestRecord(rid, q, pool.name, t_arrival=t)
                 records.append(rec)
                 pool.result.queries += 1
@@ -406,18 +446,30 @@ class FleetSimulator:
             self._horizon = max(self._horizon, now)
 
     def _refill(self, pool: _PoolRuntime, now: float, events, seq) -> None:
-        """Admit queued requests into free slots (least-loaded instance)."""
+        """Admit queued requests into free slots (least-loaded instance).
+
+        Block-capacity admission: with ``kv_blocks`` set, the head request is
+        admitted only to an instance whose free blocks cover its worst-case
+        context — a free slot alone is not capacity. The head waits otherwise
+        (head-of-line, matching the paged batcher's FIFO admission)."""
         while pool.queue:
-            inst = min(pool.instances, key=lambda i: len(i.residents))
-            if inst.free_slots <= 0:
+            need = pool.spec.blocks_needed(pool.queue[0][2].query)
+            ready = [i for i in pool.instances
+                     if i.free_slots > 0 and i.fits(need)]
+            if not ready:
                 break
+            inst = min(ready, key=lambda i: len(i.residents))
             rec = pool.dequeue()
             inst.advance(self.model, now)
             self._complete(inst, now)
-            res = _Resident(self.model, rec, pool.spec.system, now)
+            res = _Resident(self.model, rec, pool.spec.system, now, need)
             rec.t_start = now
             rec.t_decode = res.prefill_end
             inst.residents.append(res)
+            inst.blocks_in_use += need
+            pool.result.peak_residents = max(
+                pool.result.peak_residents,
+                sum(len(i.residents) for i in pool.instances))
             self._reschedule(inst, now, events, seq)
 
     def _reschedule(self, inst: _Instance, now: float, events, seq) -> None:

@@ -49,6 +49,15 @@ class Assignment:
 
 
 # ----------------------------------------------------------------- fleet state
+def kv_blocks_needed(tokens: int, block_size: int) -> int:
+    """ceil(tokens / block_size): worst-case KV blocks for a request whose
+    total context is ``tokens``. ONE definition shared by the paged batcher
+    (admission), the fleet simulator (capacity), and the schedulers
+    (pricing) — these must stay bit-identical or admission desynchronizes
+    from pricing."""
+    return -(-tokens // block_size)
+
+
 @dataclass
 class PoolSnapshot:
     """Observable state of one pool at dispatch time."""
@@ -58,6 +67,16 @@ class PoolSnapshot:
     busy_slots: int = 0
     queue_len: int = 0
     est_wait_s: float = 0.0      # estimated queueing delay for a new arrival
+    # KV-memory state (paged runtimes / block-capped simulator pools), in
+    # PER-INSTANCE admission terms: ``free_blocks`` is the headroom of the
+    # most-free single instance (a request lives on one instance, so
+    # pool-aggregate free blocks overstate admissibility), ``total_blocks``
+    # one instance's capacity. None / 0 means the pool reports no memory
+    # constraint (slot-bound only), which keeps every pre-paging snapshot
+    # producer valid unchanged.
+    free_blocks: Optional[int] = None
+    total_blocks: Optional[int] = None
+    block_size: int = 0
 
     @property
     def total_slots(self) -> int:
@@ -66,6 +85,25 @@ class PoolSnapshot:
     @property
     def free_slots(self) -> int:
         return max(0, self.total_slots - self.busy_slots)
+
+    def blocks_needed(self, m: int, n: int) -> int:
+        """Worst-case KV blocks for an (m, n) request; 0 if unconstrained."""
+        if not self.block_size or not self.total_blocks:
+            return 0
+        return kv_blocks_needed(m + n, self.block_size)
+
+    def mem_wait_s(self, m: int, n: int, runtime_s: float) -> float:
+        """Extra admission delay from KV-memory pressure: when the request's
+        worst-case blocks exceed the pool's free blocks, the deficit must
+        drain from resident contexts first — approximated as the fraction of
+        one service time proportional to the missing share of blocks."""
+        needed = self.blocks_needed(m, n)
+        if needed <= 0:
+            return 0.0
+        free = self.free_blocks or 0
+        if needed <= free:
+            return 0.0
+        return runtime_s * (needed - free) / needed
 
 
 @dataclass
@@ -218,14 +256,21 @@ class CapacityAwareScheduler(Scheduler):
 
     def dispatch(self, q: Query, fleet: Optional[FleetState] = None) -> SystemProfile:
         """Queue-aware dispatch: price each pool's *observed* estimated wait
-        (from the fleet snapshot) into the Eq. 1 cost. Without a snapshot the
-        internal reservation heap is read (not written) for the wait."""
+        (from the fleet snapshot) into the Eq. 1 cost, plus the KV-memory
+        pressure term when the pool reports block occupancy — a pool with
+        free slots but no free blocks is priced like a backed-up pool, so
+        memory-bound pools shed load before head-of-line blocking builds.
+        Without a snapshot the internal reservation heap is read (not
+        written) for the wait."""
         if fleet is None:
             return self.choose(q)
         best, best_c = None, float("inf")
         for s in self.systems:
             snap = fleet.for_system(s)
             wait = snap.est_wait_s if snap is not None else 0.0
+            if snap is not None:
+                wait += snap.mem_wait_s(q.m, q.n,
+                                        self.model.runtime(q.m, q.n, s))
             c = self.model.cost(q.m, q.n, s, wait_s=wait)
             if c < best_c:
                 best, best_c = s, c

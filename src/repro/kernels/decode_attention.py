@@ -76,6 +76,127 @@ def _decode_kernel(kv_len_ref, q_ref, k_ref, v_ref, o_ref, acc_ref, m_ref, l_ref
         o_ref[0, 0] = (acc_ref[...] / l).astype(o_ref.dtype)
 
 
+def _paged_decode_kernel(kv_len_ref, tables_ref, q_ref, k_ref, v_ref, o_ref,
+                         acc_ref, m_ref, l_ref, *, sm_scale: float,
+                         window: Optional[int], softcap: Optional[float],
+                         block_size: int, num_blocks: int):
+    """Same online-softmax body as ``_decode_kernel``; the difference is pure
+    addressing — the K/V BlockSpec index maps route each grid step's block
+    through the scalar-prefetched block table, so the kernel walks the lane's
+    logical context while reading physically scattered pool blocks."""
+    b = pl.program_id(0)
+    ik = pl.program_id(2)
+    kv_len = kv_len_ref[b]
+
+    @pl.when(ik == 0)
+    def _init():
+        acc_ref[...] = jnp.zeros_like(acc_ref)
+        m_ref[...] = jnp.full_like(m_ref, NEG_INF)
+        l_ref[...] = jnp.zeros_like(l_ref)
+
+    k_first = ik * block_size
+    live = k_first < kv_len
+    if window is not None:
+        k_last = k_first + block_size - 1
+        live &= k_last >= (kv_len - window)
+
+    @pl.when(live)
+    def _compute():
+        q = q_ref[0, 0].astype(jnp.float32) * sm_scale          # (G, D)
+        k = k_ref[0, 0].astype(jnp.float32)                     # (bs, D)
+        v = v_ref[0, 0].astype(jnp.float32)
+        s = jax.lax.dot_general(q, k, (((1,), (1,)), ((), ())),
+                                preferred_element_type=jnp.float32)  # (G, bs)
+        if softcap is not None:
+            s = softcap * jnp.tanh(s / softcap)
+        G = s.shape[0]
+        kpos = ik * block_size + jax.lax.broadcasted_iota(
+            jnp.int32, (G, block_size), 1)
+        mask = kpos < kv_len
+        if window is not None:
+            mask &= kpos >= (kv_len - window)
+        s = jnp.where(mask, s, NEG_INF)
+
+        m_prev, l_prev = m_ref[...], l_ref[...]
+        m_new = jnp.maximum(m_prev, jnp.max(s, axis=1, keepdims=True))
+        alpha = jnp.exp(m_prev - m_new)
+        p = jnp.where(mask, jnp.exp(s - m_new), 0.0)
+        l_ref[...] = l_prev * alpha + jnp.sum(p, axis=1, keepdims=True)
+        acc_ref[...] = acc_ref[...] * alpha + jax.lax.dot_general(
+            p, v, (((1,), (0,)), ((), ())), preferred_element_type=jnp.float32)
+        m_ref[...] = m_new
+
+    @pl.when(ik == num_blocks - 1)
+    def _finalize():
+        l = l_ref[...]
+        l = jnp.where(l == 0.0, 1.0, l)
+        o_ref[0, 0] = (acc_ref[...] / l).astype(o_ref.dtype)
+
+
+@functools.partial(jax.jit, static_argnames=("window", "softcap", "interpret"))
+def paged_decode_attention(q: jnp.ndarray, k_pool: jnp.ndarray,
+                           v_pool: jnp.ndarray, block_tables: jnp.ndarray,
+                           kv_len: jnp.ndarray, *,
+                           window: Optional[int] = None,
+                           softcap: Optional[float] = None,
+                           interpret: bool = True) -> jnp.ndarray:
+    """Flash-decode over a paged KV cache.
+
+    q: (B, Hq, 1, D); pools: (num_blocks, Hkv, block_size, D);
+    block_tables: (B, max_blocks) int32 — entry j is the pool block holding
+    lane b's positions [j*block_size, (j+1)*block_size); dead entries must
+    still be valid indices (the batcher points them at the reserved null
+    block 0, and the kernel skips them structurally via kv_len).
+    kv_len: (B,) int32. Returns (B, Hq, 1, D).
+
+    Both kv_len and the block table ride in SMEM via scalar prefetch: the
+    table steers the K/V DMA source block per grid step, so the split-KV scan
+    touches only the lane's own blocks — no contiguous copy of the cache.
+    """
+    B, Hq, one, D = q.shape
+    assert one == 1
+    _, Hkv, block_size, _ = k_pool.shape
+    assert Hq % Hkv == 0
+    G = Hq // Hkv
+    sm_scale = D ** -0.5
+    mb = block_tables.shape[1]
+
+    qg = q.reshape(B, Hkv, G, D)
+    kv_len = kv_len.astype(jnp.int32)
+    block_tables = block_tables.astype(jnp.int32)
+
+    kernel = functools.partial(
+        _paged_decode_kernel, sm_scale=sm_scale, window=window,
+        softcap=softcap, block_size=block_size, num_blocks=mb)
+
+    grid_spec = pltpu.PrefetchScalarGridSpec(
+        num_scalar_prefetch=2,
+        grid=(B, Hkv, mb),
+        in_specs=[
+            pl.BlockSpec((1, 1, G, D), lambda b, h, ik, *_: (b, h, 0, 0)),
+            pl.BlockSpec((1, 1, block_size, D),
+                         lambda b, h, ik, kv_len_ref, tables_ref:
+                         (tables_ref[b, ik], h, 0, 0)),
+            pl.BlockSpec((1, 1, block_size, D),
+                         lambda b, h, ik, kv_len_ref, tables_ref:
+                         (tables_ref[b, ik], h, 0, 0)),
+        ],
+        out_specs=pl.BlockSpec((1, 1, G, D), lambda b, h, ik, *_: (b, h, 0, 0)),
+        scratch_shapes=[
+            pltpu.VMEM((G, D), jnp.float32),
+            pltpu.VMEM((G, 1), jnp.float32),
+            pltpu.VMEM((G, 1), jnp.float32),
+        ],
+    )
+    out = pl.pallas_call(
+        kernel,
+        grid_spec=grid_spec,
+        out_shape=jax.ShapeDtypeStruct((B, Hkv, G, D), q.dtype),
+        interpret=interpret,
+    )(kv_len, block_tables, qg, k_pool, v_pool)
+    return out.reshape(B, Hq, 1, D)
+
+
 @functools.partial(
     jax.jit,
     static_argnames=("window", "softcap", "block_k", "interpret"),

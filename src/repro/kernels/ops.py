@@ -57,6 +57,22 @@ def decode_attention(q, k_cache, v_cache, kv_len, *, window: Optional[int] = Non
                                 interpret=(b == "pallas_interpret"))
 
 
+def paged_decode_attention(q, k_pool, v_pool, block_tables, kv_len, *,
+                           window: Optional[int] = None,
+                           softcap: Optional[float] = None,
+                           backend: str = "auto") -> jnp.ndarray:
+    """Decode attention through a paged KV cache (shared block pool +
+    per-lane block tables). See ``kernels.ref.paged_decode_attention``."""
+    b = resolve_backend(backend)
+    if b == "ref":
+        return _ref.paged_decode_attention(q, k_pool, v_pool, block_tables,
+                                           kv_len=kv_len, window=window,
+                                           softcap=softcap)
+    return _da.paged_decode_attention(q, k_pool, v_pool, block_tables, kv_len,
+                                      window=window, softcap=softcap,
+                                      interpret=(b == "pallas_interpret"))
+
+
 def ssd_scan(x, dt, A, Bmat, Cmat, *, chunk: int = 128, backend: str = "auto"):
     b = resolve_backend(backend)
     if b == "ref":

@@ -131,6 +131,38 @@ def decode_attention(q: jnp.ndarray, k_cache: jnp.ndarray, v_cache: jnp.ndarray,
     return out.reshape(B, Hq, 1, D).astype(q.dtype)
 
 
+def gather_paged_kv(pool: jnp.ndarray, block_tables: jnp.ndarray) -> jnp.ndarray:
+    """Materialize a contiguous per-lane view of a paged KV pool.
+
+    pool: (num_blocks, Hkv, block_size, D) shared block pool;
+    block_tables: (B, max_blocks) int32 per-lane block indices (entries past a
+    lane's live length may point anywhere valid — typically the reserved null
+    block 0 — since downstream attention masks by kv_len).
+    Returns (B, Hkv, max_blocks * block_size, D).
+    """
+    g = pool[block_tables]                       # (B, mb, Hkv, bs, D)
+    B, mb, Hkv, bs, D = g.shape
+    return g.transpose(0, 2, 1, 3, 4).reshape(B, Hkv, mb * bs, D)
+
+
+def paged_decode_attention(q: jnp.ndarray, k_pool: jnp.ndarray,
+                           v_pool: jnp.ndarray, block_tables: jnp.ndarray, *,
+                           kv_len: jnp.ndarray, softcap: Optional[float] = None,
+                           window: Optional[int] = None) -> jnp.ndarray:
+    """Single-token decode attention reading K/V through block tables.
+
+    q: (B, Hq, 1, D); pools: (num_blocks, Hkv, block_size, D);
+    block_tables: (B, max_blocks) int32; kv_len: (B,) valid positions per lane
+    (the new token's K/V must already be written into its block at kv_len-1).
+    Semantic ground truth for the Pallas paged kernel: gather the lane's
+    blocks into a contiguous cache view, then run dense masked decode.
+    """
+    k = gather_paged_kv(k_pool, block_tables)
+    v = gather_paged_kv(v_pool, block_tables)
+    return decode_attention(q, k, v, kv_len=kv_len, softcap=softcap,
+                            window=window)
+
+
 def ssd_scan(x: jnp.ndarray, dt: jnp.ndarray, A: jnp.ndarray,
              Bmat: jnp.ndarray, Cmat: jnp.ndarray,
              init_state: Optional[jnp.ndarray] = None,

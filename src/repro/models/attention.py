@@ -159,6 +159,112 @@ def decode_self_attention(params, cfg: ModelConfig, x, *, positions, k_cache,
     return o, k_cache, v_cache
 
 
+def paged_prefill_chunk_attention(params, cfg: ModelConfig, x, *, positions,
+                                  k_pool, v_pool, table, block_ids, rows,
+                                  kv_len, q_offset,
+                                  window: Optional[int] = None,
+                                  backend: str = "auto",
+                                  k_scale_pool=None, v_scale_pool=None):
+    """Chunked-prefill self attention for ONE lane of a paged cache.
+
+    x: (1, C, d) — the lane's next C prompt tokens (rows past the valid count
+    carry garbage; their writes are pre-redirected to the null block via
+    ``block_ids``). The chunk's K/V rows are scattered into the shared pools
+    at (block_ids, rows), then the chunk queries attend over the lane's
+    gathered blocks with causal masking at absolute offset ``q_offset`` and
+    validity masking at ``kv_len`` (shape (1,), = q_offset + n_valid).
+
+    Returns (out, k_pool, v_pool[, k_scale_pool, v_scale_pool]).
+    """
+    hd = cfg.resolved_head_dim
+    q = _split_heads(L.linear(params["q"], x), cfg.num_heads, hd)     # (1,Hq,C,D)
+    k = _split_heads(L.linear(params["k"], x), cfg.num_kv_heads, hd)
+    v = _split_heads(L.linear(params["v"], x), cfg.num_kv_heads, hd)
+    q, k = _position_encode(cfg, q, k, positions)
+    krows = k[0].transpose(1, 0, 2)                                   # (C, Hkv, D)
+    vrows = v[0].transpose(1, 0, 2)
+    quant = k_scale_pool is not None
+    if quant:
+        kq, ks = quantize_kv(krows)
+        vq, vs = quantize_kv(vrows)
+        k_pool = k_pool.at[block_ids, :, rows].set(kq)
+        v_pool = v_pool.at[block_ids, :, rows].set(vq)
+        k_scale_pool = k_scale_pool.at[block_ids, :, rows].set(ks)
+        v_scale_pool = v_scale_pool.at[block_ids, :, rows].set(vs)
+        k_read = dequantize_kv(ref.gather_paged_kv(k_pool, table[None]),
+                               ref.gather_paged_kv(k_scale_pool, table[None]),
+                               q.dtype)
+        v_read = dequantize_kv(ref.gather_paged_kv(v_pool, table[None]),
+                               ref.gather_paged_kv(v_scale_pool, table[None]),
+                               q.dtype)
+    else:
+        k_pool = k_pool.at[block_ids, :, rows].set(krows.astype(k_pool.dtype))
+        v_pool = v_pool.at[block_ids, :, rows].set(vrows.astype(v_pool.dtype))
+        k_read = ref.gather_paged_kv(k_pool, table[None])
+        v_read = ref.gather_paged_kv(v_pool, table[None])
+    # chunk attention runs on the masked reference path: it needs BOTH a
+    # traced q_offset and kv_len masking, which the flash prefill kernel does
+    # not expose; chunks are short, so the O(C * ctx) dense scores are cheap
+    out = ref.mha_attention(q, k_read, v_read, causal=True, window=window,
+                            softcap=cfg.attn_logit_softcap,
+                            q_offset=q_offset, kv_len=kv_len)
+    o = L.linear(params["o"], _merge_heads(out))
+    if quant:
+        return o, k_pool, v_pool, k_scale_pool, v_scale_pool
+    return o, k_pool, v_pool
+
+
+def paged_decode_self_attention(params, cfg: ModelConfig, x, *, positions,
+                                k_pool, v_pool, block_tables, block_ids, rows,
+                                kv_len, window: Optional[int] = None,
+                                backend: str = "auto",
+                                k_scale_pool=None, v_scale_pool=None):
+    """One-token decode over a paged cache, batched across lanes.
+
+    x: (B, 1, d); pools: (num_blocks, Hkv, block_size, D); block_tables
+    (B, max_blocks); block_ids/rows (B,) precomputed write targets (non-live
+    lanes redirected to the null block by the caller); kv_len (B,) length
+    INCLUDING this token. Returns (out, pools...) like the dense variant.
+    """
+    hd = cfg.resolved_head_dim
+    q = _split_heads(L.linear(params["q"], x), cfg.num_heads, hd)     # (B,Hq,1,D)
+    k = _split_heads(L.linear(params["k"], x), cfg.num_kv_heads, hd)
+    v = _split_heads(L.linear(params["v"], x), cfg.num_kv_heads, hd)
+    q, k = _position_encode(cfg, q, k, positions)
+    krow = k[:, :, 0, :]                                              # (B, Hkv, D)
+    vrow = v[:, :, 0, :]
+    quant = k_scale_pool is not None
+    if quant:
+        kq, ks = quantize_kv(krow)
+        vq, vs = quantize_kv(vrow)
+        k_pool = k_pool.at[block_ids, :, rows].set(kq)
+        v_pool = v_pool.at[block_ids, :, rows].set(vq)
+        k_scale_pool = k_scale_pool.at[block_ids, :, rows].set(ks)
+        v_scale_pool = v_scale_pool.at[block_ids, :, rows].set(vs)
+        # int8 pools: gather + dequantize, then the dense decode kernel (the
+        # paged kernel reads f32/bf16 pools only)
+        k_read = dequantize_kv(ref.gather_paged_kv(k_pool, block_tables),
+                               ref.gather_paged_kv(k_scale_pool, block_tables),
+                               q.dtype)
+        v_read = dequantize_kv(ref.gather_paged_kv(v_pool, block_tables),
+                               ref.gather_paged_kv(v_scale_pool, block_tables),
+                               q.dtype)
+        out = ops.decode_attention(q, k_read, v_read, kv_len, window=window,
+                                   softcap=cfg.attn_logit_softcap,
+                                   backend=backend)
+    else:
+        k_pool = k_pool.at[block_ids, :, rows].set(krow.astype(k_pool.dtype))
+        v_pool = v_pool.at[block_ids, :, rows].set(vrow.astype(v_pool.dtype))
+        out = ops.paged_decode_attention(q, k_pool, v_pool, block_tables,
+                                         kv_len, window=window,
+                                         softcap=cfg.attn_logit_softcap,
+                                         backend=backend)
+    o = L.linear(params["o"], _merge_heads(out))
+    if quant:
+        return o, k_pool, v_pool, k_scale_pool, v_scale_pool
+    return o, k_pool, v_pool
+
+
 def cross_attention(params, cfg: ModelConfig, x, *, enc_k, enc_v, backend: str = "auto"):
     """Decoder cross-attention over precomputed encoder K/V (B, Hkv, S_enc, D)."""
     hd = cfg.resolved_head_dim

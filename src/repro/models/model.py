@@ -315,6 +315,179 @@ def init_cache(cfg: ModelConfig, batch_size: int, max_len: int, dtype=jnp.float3
 
 
 # ===========================================================================
+# paged KV cache
+# ===========================================================================
+# Families whose serving cache is attention K/V and therefore pageable. SSM
+# and hybrid lanes carry fixed-size recurrent state (paging buys nothing);
+# audio/vlm prompts carry non-token modalities the chunked path cannot split.
+PAGED_FAMILIES = ("dense", "moe")
+
+# Pool block 0 is the NULL BLOCK: never allocated, all dead block-table
+# entries point at it, and writes from padded chunk rows / idle decode lanes
+# are redirected into it. Readers mask by kv_len, so its contents are
+# unreachable garbage by construction.
+NULL_BLOCK = 0
+
+
+def init_paged_cache(cfg: ModelConfig, lanes: int, num_blocks: int,
+                     block_size: int, dtype=jnp.float32, *,
+                     max_blocks_per_lane: Optional[int] = None,
+                     kv_quant: bool = False) -> Dict[str, jnp.ndarray]:
+    """Paged KV cache: one shared block pool per instance + per-lane tables.
+
+    Layout (vLLM-style, TPU-friendly static shapes):
+      kp/vp         (layers, num_blocks, Hkv, block_size, hd)  shared pool
+      block_tables  (lanes, max_blocks_per_lane) int32         logical->physical
+      pos           (lanes,) int32                             valid context
+
+    Block allocation/refcounting is host-side policy (``serving.batching``);
+    this pytree only carries the device state. ``kv_quant`` stores int8
+    blocks with per-row f32 scale pools, as in the dense cache.
+    """
+    if cfg.family not in PAGED_FAMILIES:
+        raise ValueError(f"paged KV cache supports families {PAGED_FAMILIES}, "
+                         f"not {cfg.family!r}")
+    if num_blocks < 2:
+        raise ValueError("need >= 2 blocks (block 0 is the reserved null block)")
+    hd = cfg.resolved_head_dim
+    mb = max_blocks_per_lane if max_blocks_per_lane is not None else num_blocks
+    kv_dtype = jnp.int8 if kv_quant else dtype
+    cache: Dict[str, jnp.ndarray] = {
+        "pos": jnp.zeros((lanes,), jnp.int32),
+        "block_tables": jnp.full((lanes, mb), NULL_BLOCK, jnp.int32),
+        "kp": jnp.zeros((cfg.num_layers, num_blocks, cfg.num_kv_heads,
+                         block_size, hd), kv_dtype),
+    }
+    cache["vp"] = jnp.zeros_like(cache["kp"])
+    if kv_quant:
+        cache["kp_scale"] = jnp.zeros((cfg.num_layers, num_blocks,
+                                       cfg.num_kv_heads, block_size, 1),
+                                      jnp.float32)
+        cache["vp_scale"] = jnp.zeros_like(cache["kp_scale"])
+    return cache
+
+
+def prefill_paged_chunk(params: Params, cfg: ModelConfig, tokens, cache, *,
+                        lane, n_valid, backend: str = "auto"):
+    """Prefill ONE chunk of one lane's prompt into its allocated blocks.
+
+    tokens: (1, C) — the next C prompt tokens of ``lane`` starting at the
+    lane's current ``pos`` (rows past ``n_valid`` are padding). Writes the
+    chunk's K/V into the lane's blocks, advances ``pos`` by ``n_valid``, and
+    returns (logits of the LAST VALID token (1, V), cache) — the logits only
+    matter on the final chunk, where they seed decode exactly like a dense
+    ``prefill``.
+    """
+    C = tokens.shape[1]
+    start = cache["pos"][lane]
+    n_valid = jnp.asarray(n_valid, jnp.int32)
+    h = params["embed"]["emb"][tokens]
+    offs = jnp.arange(C, dtype=jnp.int32)
+    positions = (start + offs)[None]                           # (1, C)
+    table = cache["block_tables"][lane]                        # (mb,)
+    bs = cache["kp"].shape[3]
+    valid = offs < n_valid
+    block_ids = jnp.where(valid, table[(start + offs) // bs], NULL_BLOCK)
+    rows = (start + offs) % bs
+    kv_len = (start + n_valid)[None]                           # (1,)
+    quant = "kp_scale" in cache
+    window = cfg.sliding_window
+
+    def body(carry, xs):
+        if quant:
+            lp, kp, vp, ks, vs = xs
+        else:
+            lp, kp, vp = xs
+            ks = vs = None
+        a = L.norm_apply(cfg.norm, lp["attn_norm"], carry)
+        res = ATT.paged_prefill_chunk_attention(
+            lp["attn"], cfg, a, positions=positions, k_pool=kp, v_pool=vp,
+            table=table, block_ids=block_ids, rows=rows, kv_len=kv_len,
+            q_offset=start, window=window, backend=backend,
+            k_scale_pool=ks, v_scale_pool=vs)
+        h2 = carry + res[0]
+        m = L.norm_apply(cfg.norm, lp["mlp_norm"], h2)
+        if cfg.family == "moe":
+            # dropless routing: capacity-based dispatch sizes expert capacity
+            # by the token count it sees, so per-chunk routing would drop
+            # different tokens than the dense whole-prompt prefill. Dropless
+            # makes chunked prefill chunk-size-invariant; it coincides with
+            # the dense path exactly when its capacity never binds (e.g. the
+            # dropless-capacity ``reduced()`` configs — pinned by the parity
+            # tests and the CI smoke gate).
+            y, _ = MOE.moe_apply(lp["moe"], cfg, m, dropless=True)
+        else:
+            y = L.mlp_apply(lp["mlp"], m, cfg.activation)
+        return h2 + y, res[1:]
+
+    xs = (params["layers"], cache["kp"], cache["vp"])
+    if quant:
+        xs = xs + (cache["kp_scale"], cache["vp_scale"])
+    h, pools = layer_scan(body, h, xs)
+    cache = dict(cache, kp=pools[0], vp=pools[1],
+                 pos=cache["pos"].at[lane].set(start + n_valid))
+    if quant:
+        cache.update(kp_scale=pools[2], vp_scale=pools[3])
+    last = jax.lax.dynamic_index_in_dim(h[0], jnp.maximum(n_valid - 1, 0), 0,
+                                        keepdims=False)
+    return _logits(params, cfg, last[None]), cache
+
+
+def decode_step_paged(params: Params, cfg: ModelConfig, tokens, cache, *,
+                      live=None, backend: str = "auto"):
+    """One batched decode step over every lane of a paged cache.
+
+    tokens (lanes, 1) int32; ``live`` (lanes,) bool — lanes that are empty or
+    still prefilling run the math for shape stability, but their K/V writes
+    are redirected to the null block and their ``pos`` does not advance (a
+    freed lane's blocks may already belong to another request, so a stray
+    write would corrupt it). Returns (logits (lanes, V), cache).
+    """
+    B = tokens.shape[0]
+    pos = cache["pos"]
+    if live is None:
+        live = jnp.ones((B,), bool)
+    kv_len = pos + 1
+    h = params["embed"]["emb"][tokens]
+    positions = pos[:, None].astype(jnp.int32)
+    tables = cache["block_tables"]
+    bs = cache["kp"].shape[3]
+    block_ids = jnp.where(live, tables[jnp.arange(B), pos // bs], NULL_BLOCK)
+    rows = pos % bs
+    quant = "kp_scale" in cache
+    window = cfg.sliding_window
+
+    def body(carry, xs):
+        if quant:
+            lp, kp, vp, ks, vs = xs
+        else:
+            lp, kp, vp = xs
+            ks = vs = None
+        a = L.norm_apply(cfg.norm, lp["attn_norm"], carry)
+        res = ATT.paged_decode_self_attention(
+            lp["attn"], cfg, a, positions=positions, k_pool=kp, v_pool=vp,
+            block_tables=tables, block_ids=block_ids, rows=rows, kv_len=kv_len,
+            window=window, backend=backend, k_scale_pool=ks, v_scale_pool=vs)
+        h2 = carry + res[0]
+        m = L.norm_apply(cfg.norm, lp["mlp_norm"], h2)
+        if cfg.family == "moe":
+            y, _ = MOE.moe_apply(lp["moe"], cfg, m, dropless=True)
+        else:
+            y = L.mlp_apply(lp["mlp"], m, cfg.activation)
+        return h2 + y, res[1:]
+
+    xs = (params["layers"], cache["kp"], cache["vp"])
+    if quant:
+        xs = xs + (cache["kp_scale"], cache["vp_scale"])
+    h, pools = layer_scan(body, h, xs)
+    cache = dict(cache, kp=pools[0], vp=pools[1],
+                 pos=jnp.where(live, pos + 1, pos))
+    if quant:
+        cache.update(kp_scale=pools[2], vp_scale=pools[3])
+    return _logits(params, cfg, h[:, -1]), cache
+
+
+# ===========================================================================
 # prefill
 # ===========================================================================
 def prefill(params: Params, cfg: ModelConfig, batch, cache, *,

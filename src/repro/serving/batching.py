@@ -1,11 +1,22 @@
-"""Continuous batching over a fixed-slot decode batch.
+"""Continuous batching: fixed-slot dense loop and the paged-KV runtime.
 
-Slot-based engine loop (vLLM-style, TPU-friendly static shapes):
-  * ``slots`` decode lanes share one jit'd decode_step;
-  * finished/empty lanes are refilled by prefilling queued requests into the
-    lane's cache region (prefill runs per-request, decode runs batched);
-  * per-lane kv_len rides in the cache's ``pos`` vector, so ragged contexts
-    are handled by the decode-attention kernel's length masking.
+Two engines loops share one Request/queue interface:
+
+  * ``ContinuousBatcher`` — the original dense loop: ``slots`` decode lanes
+    over one ``(layers, slots, heads, max_len, hd)`` cache; finished lanes
+    are refilled by whole-prompt prefill into a spliced lane region.
+  * ``PagedContinuousBatcher`` — vLLM-style paged runtime: a shared block
+    pool + per-lane block tables (``model.init_paged_cache``), with
+
+      - **memory-aware admission**: a request is admitted only when its
+        worst-case context (prompt + token budget) fits in free blocks, so
+        "how many requests fit" is governed by KV memory, not the slot count;
+      - **chunked prefill**: a queued prompt enters ``chunk`` tokens per tick
+        into its blocks while resident lanes keep decoding — a long prompt no
+        longer stalls the whole loop;
+      - **prefix-block sharing**: full prompt blocks are content-addressed
+        and refcounted, so n requests sharing a prompt prefix hold one
+        physical copy of its K/V.
 
 This module is deliberately single-model; cross-pool routing lives in
 ``router.py`` (the paper's scheduler).
@@ -13,14 +24,16 @@ This module is deliberately single-model; cross-pool routing lives in
 from __future__ import annotations
 
 from dataclasses import dataclass, field
-from typing import Dict, List, Optional
+from typing import Dict, List, Optional, Tuple
 
 import jax
 import jax.numpy as jnp
 import numpy as np
 
 from repro.configs.base import ModelConfig
+from repro.core.scheduler import kv_blocks_needed
 from repro.models import model as M
+from repro.models.model import NULL_BLOCK
 from repro.serving.engine import InferenceEngine
 
 
@@ -34,15 +47,16 @@ class Request:
     eos_id: Optional[int] = None    # stop early when this token is emitted
 
 
-class ContinuousBatcher:
-    """Fixed-slot continuous batching loop on one engine."""
+class _BatcherBase:
+    """Queue/lane state and the tick loop shared by both runtimes. The
+    EOS-retirement predicate in particular must stay ONE definition — the
+    dense/paged token-parity gate depends on identical completion rules."""
 
-    def __init__(self, engine: InferenceEngine, slots: int = 4):
+    def __init__(self, engine: InferenceEngine, slots: int):
         self.engine = engine
         self.slots = slots
         self.queue: List[Request] = []
         self.active: List[Optional[Request]] = [None] * slots
-        self.cache = engine.new_cache(slots)
         self._last_tok = jnp.zeros((slots,), jnp.int32)
 
     def submit(self, req: Request) -> None:
@@ -60,6 +74,23 @@ class ContinuousBatcher:
             return True
         return len(req.out_tokens) >= req.max_new_tokens
 
+    def step(self) -> None:
+        raise NotImplementedError
+
+    def run(self, max_ticks: int = 10_000) -> None:
+        ticks = 0
+        while self.busy and ticks < max_ticks:
+            self.step()
+            ticks += 1
+
+
+class ContinuousBatcher(_BatcherBase):
+    """Fixed-slot continuous batching loop on one engine (dense cache)."""
+
+    def __init__(self, engine: InferenceEngine, slots: int = 4):
+        super().__init__(engine, slots)
+        self.cache = engine.new_cache(slots)
+
     def _retire(self, i: int) -> None:
         self.active[i].done = True
         self.active[i] = None
@@ -70,12 +101,9 @@ class ContinuousBatcher:
             if self.active[i] is None and self.queue:
                 req = self.queue.pop(0)
                 self.active[i] = req
-                m = len(req.tokens)
                 # per-request prefill into a fresh single-lane cache, then
                 # splice the lane into the batched cache
-                lane_cache = M.init_cache(self.engine.cfg, 1, self.engine.max_len,
-                                          self.engine.dtype,
-                                          enc_len=self.engine.cfg.encoder_seq_len or None)
+                lane_cache = self.engine.new_cache(1)
                 batch = {"tokens": jnp.asarray(req.tokens, jnp.int32)[None]}
                 logits, lane_cache = self.engine.prefill(batch, lane_cache)
                 tok = int(jnp.argmax(logits, axis=-1)[0])
@@ -92,19 +120,326 @@ class ContinuousBatcher:
         if not live:
             return
         logits, self.cache = self.engine.decode(self._last_tok[:, None], self.cache)
-        toks = np.asarray(jnp.argmax(logits, axis=-1), np.int32)
+        # the argmax stays on device as next tick's input (dead lanes pick up
+        # garbage — harmless, refill overwrites before any read); one host
+        # sync per tick for the bookkeeping below
+        tok_dev = jnp.argmax(logits, axis=-1).astype(jnp.int32)
+        self._last_tok = tok_dev
+        toks = np.asarray(tok_dev)
         for i in live:
             req = self.active[i]
             req.out_tokens.append(int(toks[i]))
-            self._last_tok = self._last_tok.at[i].set(int(toks[i]))
             if self._finished(req):
                 self._retire(i)
 
-    def run(self, max_ticks: int = 10_000) -> None:
-        ticks = 0
-        while self.busy and ticks < max_ticks:
-            self.step()
-            ticks += 1
+
+# ===========================================================================
+# paged runtime
+# ===========================================================================
+class BlockAllocator:
+    """Host-side refcounted free-list over the shared pool.
+
+    Block 0 (``model.NULL_BLOCK``) is reserved as the garbage sink for
+    redirected writes and is never handed out; usable capacity is
+    ``num_blocks - 1``. Refcounts > 1 arise from prefix sharing — a block is
+    returned to the free list only when its last reference drops.
+    """
+
+    def __init__(self, num_blocks: int):
+        if num_blocks < 2:
+            raise ValueError("need >= 2 blocks (block 0 is reserved)")
+        self.num_blocks = num_blocks
+        self._free = list(range(num_blocks - 1, 0, -1))   # pop() yields low ids
+        self.refcount = [0] * num_blocks
+        self.total_allocs = 0          # fresh blocks ever handed out
+        self.peak_used = 0
+
+    @property
+    def total_blocks(self) -> int:
+        return self.num_blocks - 1
+
+    @property
+    def free_blocks(self) -> int:
+        return len(self._free)
+
+    @property
+    def used_blocks(self) -> int:
+        return self.total_blocks - len(self._free)
+
+    def alloc(self, n: int) -> Optional[List[int]]:
+        """n fresh blocks at refcount 1, or None if they don't fit."""
+        if n > len(self._free):
+            return None
+        out = [self._free.pop() for _ in range(n)]
+        for b in out:
+            self.refcount[b] = 1
+        self.total_allocs += n
+        self.peak_used = max(self.peak_used, self.used_blocks)
+        return out
+
+    def incref(self, blocks: List[int]) -> None:
+        for b in blocks:
+            if self.refcount[b] <= 0:
+                raise ValueError(f"incref of free block {b}")
+            self.refcount[b] += 1
+
+    def decref(self, blocks: List[int]) -> None:
+        for b in blocks:
+            self.refcount[b] -= 1
+            if self.refcount[b] < 0:
+                raise ValueError(f"double free of block {b}")
+            if self.refcount[b] == 0:
+                self._free.append(b)
+
+
+class PrefixBlockCache:
+    """Content-addressed map of fully-written prompt blocks -> pool blocks.
+
+    Keys chain parent-hash + the block's tokens, so a hit at depth d implies
+    hits at all shallower depths (radix-tree semantics in a flat dict). Each
+    entry holds one owned reference; ``evict`` releases entries whose only
+    remaining reference is the cache's own, oldest first.
+    """
+
+    def __init__(self, allocator: BlockAllocator):
+        self.allocator = allocator
+        self._map: Dict[Tuple, int] = {}     # chain key -> block id
+        self.hits = 0                        # blocks reused via sharing
+
+    @staticmethod
+    def _chain(prompt: np.ndarray, block_size: int, upto_blocks: int):
+        key: Tuple = ()
+        for b in range(upto_blocks):
+            key = (key, tuple(int(t) for t in
+                              prompt[b * block_size:(b + 1) * block_size]))
+            yield key
+
+    def match(self, prompt: np.ndarray, block_size: int) -> List[int]:
+        """Longest shared prefix as a list of pool block ids. Matches at most
+        ``(m - 1) // block_size`` blocks so every admitted request computes at
+        least its final prompt token (whose logits seed decode)."""
+        limit = (len(prompt) - 1) // block_size
+        out: List[int] = []
+        for key in self._chain(prompt, block_size, limit):
+            blk = self._map.get(key)
+            if blk is None:
+                break
+            out.append(blk)
+        if out:
+            self.allocator.incref(out)
+            self.hits += len(out)
+        return out
+
+    def register(self, prompt: np.ndarray, block_size: int,
+                 table: List[int], lo_block: int, hi_block: int) -> None:
+        """Pin prompt blocks [lo_block, hi_block) — now fully written — under
+        their content keys. Idempotent per key; the pin is an owned ref."""
+        for b, key in enumerate(self._chain(prompt, block_size, hi_block)):
+            if b < lo_block or key in self._map:
+                continue
+            self._map[key] = table[b]
+            self.allocator.incref([table[b]])
+
+    def evict(self, need: int) -> None:
+        """Drop pinned-only entries (refcount == 1) until ``need`` blocks are
+        free or nothing more can be released. Deepest chain entries go first:
+        evicting a shallow key would orphan its descendants — ``match`` stops
+        at the first miss, so they could never be reached again, yet would
+        stay pinned."""
+        if need <= self.allocator.free_blocks:
+            return
+        for key in reversed(list(self._map)):
+            blk = self._map[key]
+            if self.allocator.refcount[blk] == 1:
+                del self._map[key]
+                self.allocator.decref([blk])
+                if self.allocator.free_blocks >= need:
+                    return
+
+
+@dataclass
+class _LaneState:
+    """Host-side bookkeeping for one decode lane of the paged batcher."""
+    blocks: List[int]            # this request's block-table prefix (owned refs)
+    prefilled: int               # prompt tokens already written (incl. shared)
+    registered: int              # full prompt blocks already in the prefix map
+
+
+class PagedContinuousBatcher(_BatcherBase):
+    """Paged-KV continuous batching: block-table cache, chunked prefill
+    interleaved with decode ticks, refcounted prefix sharing, and
+    memory-aware admission.
+
+    Interface-compatible with ``ContinuousBatcher`` (submit/step/run/busy)
+    plus the observable memory state (``free_blocks``/``total_blocks``) the
+    router exports to schedulers via ``PoolSnapshot``.
+    """
+
+    def __init__(self, engine: InferenceEngine, slots: int = 4, *,
+                 num_blocks: int = 64, block_size: int = 16, chunk: int = 32,
+                 prefix_sharing: bool = True):
+        super().__init__(engine, slots)
+        self.block_size = block_size
+        self.chunk = chunk
+        self.cache = engine.new_paged_cache(slots, num_blocks, block_size)
+        self.allocator = BlockAllocator(num_blocks)
+        self.prefix = PrefixBlockCache(self.allocator) if prefix_sharing else None
+        self.max_blocks_per_lane = kv_blocks_needed(engine.max_len, block_size)
+        self._lane: List[Optional[_LaneState]] = [None] * slots
+
+    # ---------------------------------------------------------------- state
+    @property
+    def total_blocks(self) -> int:
+        return self.allocator.total_blocks
+
+    @property
+    def free_blocks(self) -> int:
+        """Admission headroom: free-list blocks plus what prefix eviction
+        could reclaim (pinned-only entries)."""
+        return self.allocator.free_blocks + self._evictable()
+
+    def _evictable(self) -> int:
+        if self.prefix is None:
+            return 0
+        return sum(1 for blk in self.prefix._map.values()
+                   if self.allocator.refcount[blk] == 1)
+
+    def submit(self, req: Request) -> None:
+        need = self._blocks_needed(req)
+        if need > min(self.max_blocks_per_lane, self.allocator.total_blocks):
+            raise ValueError(
+                f"request {req.rid}: worst-case context "
+                f"{len(req.tokens) + req.max_new_tokens} tokens needs {need} "
+                f"blocks, but a lane holds at most "
+                f"{min(self.max_blocks_per_lane, self.allocator.total_blocks)}")
+        super().submit(req)
+
+    def _blocks_needed(self, req: Request) -> int:
+        return kv_blocks_needed(len(req.tokens) + req.max_new_tokens,
+                                self.block_size)
+
+    # ------------------------------------------------------------ admission
+    def _admit(self) -> None:
+        """Memory-aware lane refill: FIFO head admitted only when its
+        worst-case block need fits (after prefix reuse and eviction)."""
+        for i in range(self.slots):
+            if self.active[i] is not None or not self.queue:
+                continue
+            req = self.queue[0]
+            prompt = np.asarray(req.tokens)
+            need = self._blocks_needed(req)
+            shared: List[int] = []
+            if self.prefix is not None:
+                shared = self.prefix.match(prompt, self.block_size)
+            fresh_need = need - len(shared)
+            if self.prefix is not None:
+                self.prefix.evict(fresh_need)
+            fresh = self.allocator.alloc(fresh_need)
+            if fresh is None:                     # memory-bound: head waits
+                if shared:
+                    self.allocator.decref(shared)
+                break
+            self.queue.pop(0)
+            self.active[i] = req
+            blocks = shared + fresh
+            self._lane[i] = _LaneState(blocks=blocks,
+                                       prefilled=len(shared) * self.block_size,
+                                       registered=len(shared))
+            row = np.full((self.cache["block_tables"].shape[1],), NULL_BLOCK,
+                          np.int32)
+            row[:len(blocks)] = blocks
+            self.cache = dict(
+                self.cache,
+                block_tables=self.cache["block_tables"].at[i].set(
+                    jnp.asarray(row)),
+                pos=self.cache["pos"].at[i].set(len(shared) * self.block_size))
+
+    # ------------------------------------------------------------- prefill
+    def _prefill_tick(self) -> None:
+        """Advance every still-prefilling lane by one chunk. The final chunk
+        yields the first output token, exactly like a dense prefill."""
+        first_toks: List[Tuple[int, int]] = []
+        for i in range(self.slots):
+            req, lane = self.active[i], self._lane[i]
+            if req is None or lane.prefilled >= len(req.tokens):
+                continue
+            prompt = np.asarray(req.tokens)
+            m = len(prompt)
+            c = min(self.chunk, m - lane.prefilled)
+            buf = np.zeros((self.chunk,), np.int32)
+            buf[:c] = prompt[lane.prefilled:lane.prefilled + c]
+            logits, self.cache = self.engine.prefill_chunk(
+                jnp.asarray(buf)[None], self.cache, i, c)
+            lane.prefilled += c
+            if self.prefix is not None:
+                full = min(lane.prefilled, m) // self.block_size
+                if full > lane.registered:
+                    self.prefix.register(prompt, self.block_size, lane.blocks,
+                                         lane.registered, full)
+                    lane.registered = full
+            if lane.prefilled >= m:
+                tok = int(jnp.argmax(logits, axis=-1)[0])
+                req.out_tokens.append(tok)
+                first_toks.append((i, tok))
+                if self._finished(req):           # eos on the very first token
+                    self._retire(i)
+        if first_toks:
+            last = np.asarray(self._last_tok, np.int32).copy()
+            for i, tok in first_toks:
+                last[i] = tok
+            self._last_tok = jnp.asarray(last)    # one vectorized update
+
+    # -------------------------------------------------------------- decode
+    def _decode_lanes(self) -> List[int]:
+        return [i for i, r in enumerate(self.active)
+                if r is not None and self._lane[i].prefilled >= len(r.tokens)]
+
+    def step(self) -> None:
+        """One tick: admit, one prefill chunk per filling lane, one batched
+        decode step for lanes with complete prompts. Decode lanes advance
+        even while another lane's long prompt is mid-prefill."""
+        self._admit()
+        self._prefill_tick()
+        live = self._decode_lanes()
+        if not live:
+            return
+        mask = np.zeros((self.slots,), bool)
+        mask[live] = True
+        logits, self.cache = self.engine.decode_paged(
+            self._last_tok[:, None], self.cache, jnp.asarray(mask))
+        # argmax stays on device as next tick's input; dead/prefilling lanes
+        # pick up garbage, which is harmless — prefill completion re-seeds
+        # them before any read. One host sync per tick.
+        tok_dev = jnp.argmax(logits, axis=-1).astype(jnp.int32)
+        self._last_tok = tok_dev
+        toks = np.asarray(tok_dev)
+        for i in live:
+            req = self.active[i]
+            req.out_tokens.append(int(toks[i]))
+            if self._finished(req):
+                self._retire(i)
+
+    def _retire(self, i: int) -> None:
+        req, lane = self.active[i], self._lane[i]
+        req.done = True
+        self.active[i] = None
+        self._lane[i] = None
+        self.allocator.decref(lane.blocks)        # shared blocks stay pinned
+        mb = self.cache["block_tables"].shape[1]
+        self.cache = dict(
+            self.cache,
+            block_tables=self.cache["block_tables"].at[i].set(
+                jnp.full((mb,), NULL_BLOCK, jnp.int32)),
+            pos=self.cache["pos"].at[i].set(0))
+
+    def stats(self) -> Dict[str, int]:
+        return {
+            "total_blocks": self.total_blocks,
+            "free_blocks": self.allocator.free_blocks,
+            "fresh_allocs": self.allocator.total_allocs,
+            "peak_used": self.allocator.peak_used,
+            "prefix_hits": self.prefix.hits if self.prefix else 0,
+        }
 
 
 # --------------------------------------------------------------------- lane ops

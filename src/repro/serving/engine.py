@@ -16,6 +16,7 @@ import jax.numpy as jnp
 import numpy as np
 
 from repro.configs.base import ModelConfig
+from repro.core.scheduler import kv_blocks_needed
 from repro.models import model as M
 
 
@@ -30,19 +31,44 @@ class InferenceEngine:
     """Single-model engine with a fixed max context and batch size."""
 
     def __init__(self, cfg: ModelConfig, params, *, max_len: int = 512,
-                 backend: str = "auto", dtype=jnp.float32):
+                 backend: str = "auto", dtype=jnp.float32,
+                 kv_quant: bool = False):
         self.cfg = cfg
         self.params = params
         self.max_len = max_len
         self.backend = backend
         self.dtype = dtype
+        self.kv_quant = kv_quant
         self._prefill = jax.jit(functools.partial(M.prefill, cfg=cfg, backend=backend))
         self._decode = jax.jit(functools.partial(M.decode_step, cfg=cfg, backend=backend))
+        self._prefill_chunk = jax.jit(
+            functools.partial(M.prefill_paged_chunk, cfg=cfg, backend=backend))
+        self._decode_paged = jax.jit(
+            functools.partial(M.decode_step_paged, cfg=cfg, backend=backend))
 
     # ------------------------------------------------------------------ api
     def new_cache(self, batch_size: int):
         return M.init_cache(self.cfg, batch_size, self.max_len, self.dtype,
-                            enc_len=self.cfg.encoder_seq_len or None)
+                            enc_len=self.cfg.encoder_seq_len or None,
+                            kv_quant=self.kv_quant)
+
+    def new_paged_cache(self, lanes: int, num_blocks: int, block_size: int):
+        """Paged cache sized so one lane can hold up to ``max_len`` context."""
+        mb = kv_blocks_needed(self.max_len, block_size)
+        return M.init_paged_cache(self.cfg, lanes, num_blocks, block_size,
+                                  self.dtype, max_blocks_per_lane=mb,
+                                  kv_quant=self.kv_quant)
+
+    def prefill_chunk(self, tokens: jnp.ndarray, cache, lane: int, n_valid: int):
+        """Chunked prefill of one lane (see ``model.prefill_paged_chunk``).
+        ``lane``/``n_valid`` trace as 0-d arrays: one compilation per chunk
+        shape, not per lane or valid count."""
+        return self._prefill_chunk(params=self.params, tokens=tokens,
+                                   cache=cache, lane=lane, n_valid=n_valid)
+
+    def decode_paged(self, tokens: jnp.ndarray, cache, live: jnp.ndarray):
+        return self._decode_paged(params=self.params, tokens=tokens,
+                                  cache=cache, live=live)
 
     def prefill(self, batch: Dict[str, jnp.ndarray], cache=None):
         B = batch["tokens"].shape[0]

@@ -30,16 +30,25 @@ from repro.core.scheduler import (CapacityAwareScheduler, CostOptimalScheduler,
                                   ThresholdScheduler)
 from repro.core.systems import SystemProfile
 from repro.core.workload import Query
-from repro.serving.batching import ContinuousBatcher, Request
+from repro.serving.batching import (ContinuousBatcher, PagedContinuousBatcher,
+                                    Request)
 from repro.serving.engine import InferenceEngine
 
 
 @dataclass
 class PoolStats:
+    """Per-pool accounting. ``expected_*`` is booked at routing time from the
+    request's declared (m, expected_n); the unprefixed totals are reconciled
+    against the tokens actually emitted (EOS can retire a request early), so
+    they are the execution-faithful numbers. For route()-only flows with no
+    execution backend the two coincide."""
     queries: int = 0
     energy_j: float = 0.0
     runtime_s: float = 0.0
     tokens: int = 0
+    expected_energy_j: float = 0.0
+    expected_runtime_s: float = 0.0
+    expected_tokens: int = 0
 
 
 @dataclass
@@ -95,17 +104,35 @@ class FleetRouter:
                              "dispatch maps a chosen system back to its pool "
                              "by name")
         self._rid = 0
+        # batcher-executed requests awaiting actual-token reconciliation
+        self._pending: List[tuple] = []
 
     # ------------------------------------------------------------- batchers
-    def attach_batchers(self, slots: int = 4) -> None:
-        """Give every engine-backed pool a continuous-batching backend."""
+    def attach_batchers(self, slots: int = 4, *, paged: bool = False,
+                        num_blocks: int = 64, block_size: int = 16,
+                        chunk: int = 32, prefix_sharing: bool = True) -> None:
+        """Give every engine-backed pool a continuous-batching backend.
+
+        ``paged=True`` attaches ``PagedContinuousBatcher`` instances
+        (block-table cache, chunked prefill, memory-aware admission); their
+        block occupancy is then exported to schedulers via the
+        ``PoolSnapshot`` free/total-block fields."""
         for name, eng in self.engines.items():
-            self.batchers[name] = ContinuousBatcher(eng, slots=slots)
+            if paged:
+                self.batchers[name] = PagedContinuousBatcher(
+                    eng, slots=slots, num_blocks=num_blocks,
+                    block_size=block_size, chunk=chunk,
+                    prefix_sharing=prefix_sharing)
+            else:
+                self.batchers[name] = ContinuousBatcher(eng, slots=slots)
 
     def _fleet_state(self, now: float = 0.0) -> FleetState:
         """Observable per-pool queue state for the dispatch API. Pools run a
-        single batcher instance here; est_wait is the queued backlog spread
-        over its slots (decode-time estimate at batch=1)."""
+        single batcher instance here; est_wait is the queued backlog PLUS the
+        residual decode of active lanes (a busy pool with empty queue still
+        has work in flight), spread over its slots. Paged batchers also
+        report block occupancy so memory-aware policies see the real
+        capacity limit."""
         snaps = {}
         for name, sysp in self.pools.items():
             cb = self.batchers.get(name)
@@ -118,16 +145,31 @@ class FleetRouter:
                 backlog = sum(self.model.runtime(len(r.tokens),
                                                  r.max_new_tokens, sysp)
                               for r in cb.queue)
+                for r in cb.active:            # residual decode of residents
+                    if r is None:
+                        continue
+                    rem = max(0, r.max_new_tokens - len(r.out_tokens))
+                    ph = self.model.phases(len(r.tokens), r.max_new_tokens,
+                                           sysp)
+                    backlog += ph.t_decode / max(1, r.max_new_tokens) * rem
                 est_wait = backlog / max(1, slots)
             snaps[name] = PoolSnapshot(
                 system=sysp, instances=self.counts.get(sysp.name, 1),
                 slots_per_instance=slots, busy_slots=busy,
-                queue_len=queue_len, est_wait_s=est_wait)
+                queue_len=queue_len, est_wait_s=est_wait,
+                free_blocks=getattr(cb, "free_blocks", None),
+                total_blocks=getattr(cb, "total_blocks", None),
+                block_size=getattr(cb, "block_size", 0))
         return FleetState(time_s=now, pools=snaps)
 
     # --------------------------------------------------------------- routing
     def route(self, m: int, expected_n: int, arrival_s: float = 0.0) -> str:
-        """Pick a pool for an (m, n) request; update accounting."""
+        """Pick a pool for an (m, n) request; update accounting.
+
+        Both expected and actual totals are booked here at ``expected_n``;
+        execution paths reconcile the actual totals once the emitted token
+        count is known (``_reconcile``), so EOS-retired requests no longer
+        overcount pool energy/runtime."""
         q = Query(m, expected_n, arrival_s)
         # Build the snapshot only when the policy actually reads it: without
         # an execution backend there is no observable queue state (stateful
@@ -141,10 +183,30 @@ class FleetRouter:
         name = self._name_of[sys.name]
         st = self.stats[name]
         st.queries += 1
-        st.energy_j += self.model.energy(m, expected_n, sys)
-        st.runtime_s += self.model.runtime(m, expected_n, sys)
+        e = self.model.energy(m, expected_n, sys)
+        r = self.model.runtime(m, expected_n, sys)
+        st.energy_j += e
+        st.runtime_s += r
         st.tokens += m + expected_n
+        st.expected_energy_j += e
+        st.expected_runtime_s += r
+        st.expected_tokens += m + expected_n
         return name
+
+    def _reconcile(self, name: str, m: int, expected_n: int,
+                   actual_n: int) -> None:
+        """Replace a request's expected-(m, n) booking in the ACTUAL totals
+        with its emitted token count (expected_* keeps the routing-time
+        view)."""
+        if actual_n == expected_n:
+            return
+        sysp = self.pools[name]
+        st = self.stats[name]
+        st.energy_j += (self.model.energy(m, actual_n, sysp)
+                        - self.model.energy(m, expected_n, sysp))
+        st.runtime_s += (self.model.runtime(m, actual_n, sysp)
+                         - self.model.runtime(m, expected_n, sysp))
+        st.tokens += actual_n - expected_n
 
     def submit(self, tokens: np.ndarray, max_new_tokens: int,
                arrival_s: float = 0.0,
@@ -162,12 +224,14 @@ class FleetRouter:
             req = Request(self._rid, np.asarray(tokens), max_new_tokens,
                           eos_id=eos_id)
             self.batchers[name].submit(req)
+            self._pending.append((name, len(tokens), max_new_tokens, req))
         elif name in self.engines:
             import jax.numpy as jnp
             res = self.engines[name].generate(
                 {"tokens": jnp.asarray(tokens, jnp.int32)[None]}, max_new_tokens,
                 eos_id=eos_id)
             out = res.tokens[0]
+            self._reconcile(name, len(tokens), max_new_tokens, len(out))
         sysp = self.pools[name]
         return RoutedRequest(self._rid, name,
                              self.model.energy(len(tokens), max_new_tokens, sysp),
@@ -175,9 +239,15 @@ class FleetRouter:
                              out, req)
 
     def drain(self, max_ticks: int = 10_000) -> None:
-        """Run every pool's continuous-batching loop until all requests done."""
+        """Run every pool's continuous-batching loop until all requests done,
+        then reconcile PoolStats against the tokens actually emitted (EOS may
+        have retired requests before their declared budget)."""
         for cb in self.batchers.values():
             cb.run(max_ticks)
+        for name, m, expected_n, req in self._pending:
+            if req.done:
+                self._reconcile(name, m, expected_n, len(req.out_tokens))
+        self._pending = [p for p in self._pending if not p[3].done]
 
     def fleet_report(self) -> Dict[str, Dict]:
         return {n: vars(s) for n, s in self.stats.items()}

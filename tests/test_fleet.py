@@ -208,6 +208,88 @@ def test_capacity_aware_dispatch_reads_fleet_state():
     assert spilled.name != fast.name
 
 
+# ----------------------------------------------------------- KV block capacity
+def test_block_capacity_bounds_occupancy():
+    """KV memory smaller than slots x max_len: concurrent residents are
+    bounded by blocks (not the slot count) and the queue still drains."""
+    qs = [Query(64, 64, i * 0.01) for i in range(20)]
+    sched = SingleSystemScheduler(CFG, PERF)
+    # each query needs ceil(128/16) = 8 blocks; 16 per instance -> 2 residents
+    res = simulate_fleet(CFG, qs, {"perf": PoolSpec(PERF, 1, 8, kv_blocks=16,
+                                                    block_size=16)}, sched)
+    assert len(res.records) == 20
+    assert all(r.t_done > r.t_start for r in res.records)
+    assert res.per_pool["perf"].peak_residents <= 2
+    # same fleet without the block cap saturates the slots instead
+    res2 = simulate_fleet(CFG, qs, {"perf": PoolSpec(PERF, 1, 8)},
+                          SingleSystemScheduler(CFG, PERF))
+    assert res2.per_pool["perf"].peak_residents > 2
+
+
+def test_block_capacity_zero_load_matches_static():
+    """Ample blocks + ample instances: the block-capacity path must not
+    perturb the zero-load reduction to static accounting."""
+    qs = sample_workload(40, seed=3, spec=WorkloadSpec(rate_qps=1e-3))
+    sched = ThresholdScheduler(CFG, EFF, PERF, t_in=32)
+    static = simulate(CFG, qs, sched)
+    pools = {"eff": PoolSpec(EFF, len(qs), 1, kv_blocks=4096, block_size=16),
+             "perf": PoolSpec(PERF, len(qs), 1, kv_blocks=4096, block_size=16)}
+    res = simulate_fleet(CFG, qs, pools, sched)
+    rel = abs(res.total_energy_j - static.total_energy_j) / static.total_energy_j
+    assert rel < 1e-9
+    assert res.mean_wait_s == 0.0
+
+
+def test_block_capacity_oversized_query_raises():
+    sched = SingleSystemScheduler(CFG, PERF)
+    with pytest.raises(ValueError):
+        simulate_fleet(CFG, [Query(400, 400)],
+                       {"perf": PoolSpec(PERF, 1, 1, kv_blocks=4,
+                                         block_size=16)}, sched)
+
+
+def test_snapshot_reports_block_state_and_dispatch_prices_it():
+    """The simulator's PoolSnapshot must expose block occupancy, and the
+    capacity-aware policy must spill away from a memory-starved pool even
+    when its slots are free."""
+    from dataclasses import replace
+    from repro.core import PoolSnapshot
+    fast = replace(PERF, name="twin-fast")
+    slow = replace(PERF, name="twin-slow", overhead_s=PERF.overhead_s * 1.5)
+    cp = normalized_cost_params(CFG, fast, lam=0.0)     # pure latency
+    sched = CapacityAwareScheduler(CFG, [fast, slow],
+                                   {fast.name: 1, slow.name: 1}, cp)
+    q = Query(32, 32)
+    assert runtime(CFG, q.m, q.n, fast) < runtime(CFG, q.m, q.n, slow)
+    # fast pool: free slots, zero free blocks -> must spill to the other
+    starved = FleetState(pools={
+        fast.name: PoolSnapshot(system=fast, slots_per_instance=8,
+                                free_blocks=0, total_blocks=32,
+                                block_size=16),
+        slow.name: PoolSnapshot(system=slow, free_blocks=32, total_blocks=32,
+                                block_size=16)})
+    assert sched.dispatch(q, starved).name == slow.name
+    # with blocks available the fast pool wins again
+    roomy = FleetState(pools={
+        fast.name: PoolSnapshot(system=fast, free_blocks=32, total_blocks=32,
+                                block_size=16),
+        slow.name: PoolSnapshot(system=slow, free_blocks=32, total_blocks=32,
+                                block_size=16)})
+    assert sched.dispatch(q, roomy).name == fast.name
+    # and the simulator populates the fields end to end, in PER-INSTANCE
+    # admission terms: a request lands on one instance, so 2 instances with
+    # 64 blocks each report 64 free, not 128 — otherwise a query too big for
+    # any single instance would price as admissible
+    sim = FleetSimulator(CFG, {"perf": PoolSpec(PERF, 2, 2, kv_blocks=64,
+                                                block_size=16)},
+                         SingleSystemScheduler(CFG, PERF))
+    snap = sim._fleet_state(0.0).pools["perf"]
+    assert snap.total_blocks == 64 and snap.free_blocks == 64
+    assert snap.block_size == 16
+    assert snap.blocks_needed(48, 16) == 4
+    assert snap.mem_wait_s(16 * 65, 0, 1.0) > 0.0   # 65 blocks > one instance
+
+
 # ------------------------------------------------------- satellite regressions
 def test_threshold_sweep_out_axis_default_caps_at_512():
     """The docstring's 512-token M1 output cap must actually bound the

@@ -107,6 +107,52 @@ def test_decode_attention_window_and_softcap():
                                    atol=2e-5, rtol=2e-5)
 
 
+# ------------------------------------------------------- paged decode attention
+@pytest.mark.parametrize("B,Hq,Hkv,bs,nb,mb,D", [
+    (1, 4, 4, 128, 8, 4, 64),     # MHA, kernel-sized blocks
+    (2, 8, 2, 16, 24, 6, 64),     # GQA, small serving blocks
+    (3, 4, 1, 32, 12, 5, 128),    # MQA
+])
+@pytest.mark.parametrize("dtype", [jnp.float32, jnp.bfloat16])
+def test_paged_decode_attention_matches_gathered_ref(B, Hq, Hkv, bs, nb, mb,
+                                                     D, dtype):
+    from repro.kernels.decode_attention import paged_decode_attention
+    q = jnp.asarray(RNG.normal(size=(B, Hq, 1, D)), dtype)
+    kp = jnp.asarray(RNG.normal(size=(nb, Hkv, bs, D)), dtype)
+    vp = jnp.asarray(RNG.normal(size=(nb, Hkv, bs, D)), dtype)
+    tables = jnp.asarray(RNG.integers(0, nb, size=(B, mb)), jnp.int32)
+    kv_len = jnp.asarray(RNG.integers(1, mb * bs + 1, size=(B,)), jnp.int32)
+    want = ref.paged_decode_attention(q, kp, vp, tables, kv_len=kv_len)
+    got = paged_decode_attention(q, kp, vp, tables, kv_len, interpret=True)
+    np.testing.assert_allclose(np.asarray(got, np.float32),
+                               np.asarray(want, np.float32),
+                               atol=TOL[dtype], rtol=TOL[dtype])
+    # the gathered contiguous view reduces to dense decode exactly
+    k = ref.gather_paged_kv(kp, tables)
+    v = ref.gather_paged_kv(vp, tables)
+    dense = ref.decode_attention(q, k, v, kv_len=kv_len)
+    np.testing.assert_allclose(np.asarray(want, np.float32),
+                               np.asarray(dense, np.float32), atol=0)
+
+
+def test_paged_decode_attention_window_and_softcap():
+    from repro.kernels.decode_attention import paged_decode_attention
+    B, Hq, Hkv, bs, nb, mb, D = 2, 8, 2, 32, 16, 8, 64
+    q = jnp.asarray(RNG.normal(size=(B, Hq, 1, D)), jnp.float32)
+    kp = jnp.asarray(RNG.normal(size=(nb, Hkv, bs, D)), jnp.float32)
+    vp = jnp.asarray(RNG.normal(size=(nb, Hkv, bs, D)), jnp.float32)
+    tables = jnp.asarray(RNG.integers(0, nb, size=(B, mb)), jnp.int32)
+    kv_len = jnp.asarray([60, 256], jnp.int32)
+    for kwargs in ({"window": 64}, {"softcap": 20.0},
+                   {"window": 48, "softcap": 5.0}):
+        want = ref.paged_decode_attention(q, kp, vp, tables, kv_len=kv_len,
+                                          **kwargs)
+        got = paged_decode_attention(q, kp, vp, tables, kv_len,
+                                     interpret=True, **kwargs)
+        np.testing.assert_allclose(np.asarray(got), np.asarray(want),
+                                   atol=2e-5, rtol=2e-5)
+
+
 # --------------------------------------------------------------- ssd scan
 @pytest.mark.parametrize("B,H,S,P,N,chunk", [
     (1, 1, 64, 32, 16, 32),

@@ -91,6 +91,48 @@ def test_splice_lane_batch_leading_tensor_at_single_slot():
     np.testing.assert_array_equal(np.asarray(out["last_tok"][0]), np.full(7, 5))
 
 
+def test_continuous_batching_kv_quant_lane_ops():
+    """_splice_lane/_clear_lane must carry the int8 cache's scale tensors:
+    batched generation over a kv_quant cache matches the solo quant engine."""
+    cfg = get_config("smollm-360m").reduced()
+    params = M.init_params(cfg, KEY)
+    qeng = InferenceEngine(cfg, params, max_len=96, kv_quant=True)
+    assert qeng.new_cache(2)["k"].dtype.name == "int8"
+    prompts = [np.arange(5 + 2 * i) % cfg.vocab_size for i in range(3)]
+    reqs = [Request(i, p, max_new_tokens=5) for i, p in enumerate(prompts)]
+    cb = ContinuousBatcher(qeng, slots=2)
+    for r in reqs:
+        cb.submit(r)
+    cb.run()
+    for r, p in zip(reqs, prompts):
+        assert r.done
+        solo = qeng.generate({"tokens": jnp.asarray(p, jnp.int32)[None]}, 5)
+        np.testing.assert_array_equal(np.asarray(r.out_tokens[:5]),
+                                      solo.tokens[0])
+
+
+def test_continuous_batching_hybrid_family_lane_ops():
+    """Hybrid cache family (ak/av shared-attention KV + conv/SSM state):
+    splice/clear must handle every tensor, slots=1 included."""
+    cfg = get_config("zamba2-1.2b").reduced()
+    params = M.init_params(cfg, KEY)
+    eng = InferenceEngine(cfg, params, max_len=96)
+    cache = eng.new_cache(1)
+    assert "ak" in cache and "ssm" in cache   # the families under test
+    prompts = [np.arange(6 + 3 * i) % cfg.vocab_size for i in range(3)]
+    for slots in (1, 2):
+        reqs = [Request(i, p, max_new_tokens=4) for i, p in enumerate(prompts)]
+        cb = ContinuousBatcher(eng, slots=slots)
+        for r in reqs:
+            cb.submit(r)
+        cb.run()
+        for r, p in zip(reqs, prompts):
+            assert r.done
+            solo = eng.generate({"tokens": jnp.asarray(p, jnp.int32)[None]}, 4)
+            np.testing.assert_array_equal(np.asarray(r.out_tokens[:4]),
+                                          solo.tokens[0])
+
+
 def test_batcher_eos_terminates_early(engine):
     """EOS-aware completion: find the token the model actually emits first,
     declare it EOS, and check the request retires before max_new_tokens."""
@@ -158,6 +200,87 @@ def test_router_batcher_backend_executes_and_reports(engine):
         solo = engine.generate({"tokens": jnp.asarray(p, jnp.int32)[None]}, 4)
         np.testing.assert_array_equal(np.asarray(rr.request.out_tokens[:4]),
                                       solo.tokens[0])
+
+
+def test_router_paged_batcher_backend(engine):
+    """attach_batchers(paged=True): routed execution through the paged
+    runtime matches solo generation, and the fleet snapshot exposes block
+    occupancy to schedulers."""
+    eff, perf = paper_fleet()
+    router = FleetRouter(engine.cfg, {"eff": eff, "perf": perf},
+                         {"eff": engine, "perf": engine}, policy="threshold",
+                         t_in=32)
+    router.attach_batchers(slots=2, paged=True, num_blocks=48, block_size=8,
+                           chunk=8)
+    prompts = [np.arange(6) % engine.cfg.vocab_size,
+               np.arange(64) % engine.cfg.vocab_size]
+    routed = [router.submit(p, 4) for p in prompts]
+    router.batchers["eff"].step()                    # admit the small request
+    snap = router._fleet_state().pools["eff"]
+    assert snap.total_blocks == 47 and snap.block_size == 8
+    assert snap.free_blocks < snap.total_blocks      # admission took blocks
+    router.drain()
+    for rr, p in zip(routed, prompts):
+        assert rr.request.done
+        solo = engine.generate({"tokens": jnp.asarray(p, jnp.int32)[None]}, 4)
+        np.testing.assert_array_equal(np.asarray(rr.request.out_tokens[:4]),
+                                      solo.tokens[0])
+
+
+def test_router_accounting_reconciles_eos_engine_path(engine):
+    """Satellite: energy/runtime booked at expected_n must be corrected to
+    the actually emitted token count when EOS retires a request early."""
+    eff, perf = paper_fleet()
+    prompt = np.arange(8) % engine.cfg.vocab_size
+    free = engine.generate({"tokens": jnp.asarray(prompt, jnp.int32)[None]}, 8)
+    eos = int(free.tokens[0][2])          # emitted at step 2 -> stops early
+    router = FleetRouter(engine.cfg, {"eff": eff, "perf": perf},
+                         {"eff": engine, "perf": engine}, policy="threshold",
+                         t_in=32)
+    rr = router.submit(prompt, 8, eos_id=eos)
+    st = router.fleet_report()[rr.pool]
+    assert st["expected_tokens"] == len(prompt) + 8
+    assert st["tokens"] < st["expected_tokens"]
+    assert st["energy_j"] < st["expected_energy_j"]
+    assert st["runtime_s"] < st["expected_runtime_s"]
+
+
+def test_router_accounting_reconciles_eos_batcher_path(engine):
+    eff, perf = paper_fleet()
+    prompt = np.arange(8) % engine.cfg.vocab_size
+    free = engine.generate({"tokens": jnp.asarray(prompt, jnp.int32)[None]}, 8)
+    eos = int(free.tokens[0][2])
+    router = FleetRouter(engine.cfg, {"eff": eff, "perf": perf},
+                         {"eff": engine, "perf": engine}, policy="threshold",
+                         t_in=32)
+    router.attach_batchers(slots=2)
+    router.submit(prompt, 8, eos_id=eos)
+    before = dict(router.fleet_report()["eff"])
+    router.drain()
+    after = router.fleet_report()["eff"]
+    assert before["energy_j"] == before["expected_energy_j"]  # pre-drain
+    assert after["energy_j"] < after["expected_energy_j"]     # reconciled
+    assert after["tokens"] < after["expected_tokens"]
+
+
+def test_router_est_wait_sees_active_residents(engine):
+    """Satellite: est_wait must include the residual decode of active lanes,
+    not only queued requests — a pool mid-request with an empty queue is not
+    free."""
+    eff, perf = paper_fleet()
+    router = FleetRouter(engine.cfg, {"eff": eff, "perf": perf},
+                         {"eff": engine, "perf": engine}, policy="threshold",
+                         t_in=32)
+    router.attach_batchers(slots=2)
+    idle = router._fleet_state().pools["eff"].est_wait_s
+    assert idle == 0.0
+    router.submit(np.arange(6) % engine.cfg.vocab_size, 32)
+    cb = router.batchers["eff"]
+    cb.step()                              # admit + first decode step
+    assert not cb.queue and any(r is not None for r in cb.active)
+    busy = router._fleet_state().pools["eff"].est_wait_s
+    assert busy > 0.0                      # residual decode counted
+    router.drain()
 
 
 def test_router_capacity_aware_spills(engine):
