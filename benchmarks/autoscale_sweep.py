@@ -1,0 +1,210 @@
+"""Autoscale sweep: arrival process x linger x autoscaler vs. the static
+fleet — the energy-proportionality frontier.
+
+The paper's 7.5% saving routes against a fixed fleet; its own power model
+(P = P_idle + (P_peak - P_idle)*util) makes allocated-idle draw the larger
+lever at low utilization. This sweep runs the discrete-event simulator with
+the power-state machine armed (``PoolSpec.linger_s``) and each
+``AutoscalerPolicy`` variant, against the identical static fleet, and
+records fleet energy (idle-inclusive), fleet J/token, p99 latency, SLO
+attainment, wakes, and sleep fraction — the data behind the
+fleet-energy-vs-p99 frontier plot in EXPERIMENTS.md §Autoscaling.
+
+``--smoke`` is the CI regression gate (scripts/ci.sh). It asserts:
+  * static-fleet equivalence: power states enabled but ``linger_s=inf`` and
+    autoscaler off reproduces the plain fleet's energy bit-for-bit
+    (per-request AND fleet totals);
+  * energy proportionality: under the diurnal workload the autoscaled fleet
+    strictly lowers fleet J/token vs. the static fleet at equal-or-better
+    p99 SLO attainment.
+
+Run: PYTHONPATH=src python benchmarks/autoscale_sweep.py [--queries N]
+"""
+from __future__ import annotations
+
+import argparse
+import math
+from typing import Dict, List, Optional
+
+from repro.configs import get_config
+from repro.core import (AutoscalerPolicy, CapacityAwareScheduler, PoolSpec,
+                        QueueDepthAutoscaler, SingleSystemScheduler,
+                        TargetUtilizationAutoscaler, WorkloadSpec,
+                        paper_fleet, sample_workload, simulate_fleet)
+from repro.core.cost import normalized_cost_params
+
+try:
+    from benchmarks.bench_util import write_csv as _write
+except ImportError:                      # standalone: benchmarks/ on sys.path
+    from bench_util import write_csv as _write
+
+PROCESSES = ("poisson", "diurnal", "mmpp")
+LINGERS_S = (math.inf, 60.0, 15.0)
+SLO_S = 30.0            # generous TTLT bound: wake latencies must hide in it
+DIURNAL_PERIOD_S = 240.0  # compressed day/night cycle so a sweep-sized
+DIURNAL_AMPLITUDE = 0.9   # workload spans multiple troughs
+
+
+def _workload(process: str, n_queries: int, rate: float, seed: int):
+    kwargs = {}
+    if process == "diurnal":
+        kwargs = dict(period_s=DIURNAL_PERIOD_S, amplitude=DIURNAL_AMPLITUDE)
+    return sample_workload(n_queries, seed=seed, spec=WorkloadSpec(rate_qps=rate),
+                           arrival_process=process, **kwargs)
+
+
+def _scalers(period_s: float = 10.0) -> Dict[str, Optional[AutoscalerPolicy]]:
+    return {
+        "none": None,
+        "target_util": TargetUtilizationAutoscaler(
+            period_s=period_s, min_instances=1, target_util=0.6),
+        "queue_depth": QueueDepthAutoscaler(
+            period_s=period_s, min_instances=1, high=2, low=0),
+    }
+
+
+def autoscale_sweep(n_queries: int = 400, model: str = "llama2-7b",
+                    rate: float = 1.0, seed: int = 0) -> List[List]:
+    """process x linger x autoscaler over the hybrid fleet, identical
+    workload per process so the frontier is apples-to-apples."""
+    cfg = get_config(model)
+    eff, perf = paper_fleet()
+    cp = normalized_cost_params(cfg, perf, lam=0.9)
+    rows = []
+    for process in PROCESSES:
+        qs = _workload(process, n_queries, rate, seed)
+        for linger in LINGERS_S:
+            for scaler_name, scaler in _scalers().items():
+                if not math.isfinite(linger) and scaler is None:
+                    label = "static"
+                else:
+                    label = f"linger{linger:g}+{scaler_name}"
+                pools = {"eff": PoolSpec(eff, 4, 2, linger_s=linger),
+                         "perf": PoolSpec(perf, 2, 4, linger_s=linger)}
+                sched = CapacityAwareScheduler(
+                    cfg, [eff, perf], {eff.name: 4, perf.name: 2}, cp)
+                r = simulate_fleet(cfg, qs, pools, sched, policy_name=label,
+                                   autoscaler=scaler)
+                sleep_s = sum(p.sleep_s for p in r.per_pool.values())
+                inst_s = sum(s.instances for s in pools.values()) * r.horizon_s
+                rows.append([
+                    process, f"{linger:g}", scaler_name,
+                    f"{r.fleet_energy_j:.1f}", f"{r.fleet_j_per_token:.4f}",
+                    f"{r.j_per_token:.4f}",
+                    f"{r.p50_latency_s:.3f}", f"{r.p99_latency_s:.3f}",
+                    f"{r.slo_attainment(SLO_S):.4f}",
+                    sum(p.wake_count for p in r.per_pool.values()),
+                    f"{sleep_s / max(inst_s, 1e-9):.3f}",
+                ])
+    _write("autoscale_sweep",
+           ["process", "linger_s", "autoscaler", "fleet_energy_j",
+            "fleet_j_per_tok", "j_per_tok", "p50_s", "p99_s",
+            f"slo_att_{SLO_S:g}s", "wakes", "sleep_frac"], rows)
+    return rows
+
+
+def frontier(n_queries: int = 400, model: str = "llama2-7b",
+             rate: float = 1.0, seed: int = 0) -> List[List]:
+    """Fleet-energy vs p99 frontier under the diurnal workload: one point
+    per (linger, autoscaler) config on a single perf pool, so the effect is
+    pure provisioning (no routing confound)."""
+    cfg = get_config(model)
+    _, perf = paper_fleet()
+    qs = _workload("diurnal", n_queries, rate, seed)
+    rows = []
+    for linger in LINGERS_S:
+        for scaler_name, scaler in _scalers().items():
+            r = simulate_fleet(
+                cfg, qs, {"perf": PoolSpec(perf, 4, 2, linger_s=linger)},
+                SingleSystemScheduler(cfg, perf),
+                policy_name=f"linger{linger:g}+{scaler_name}",
+                autoscaler=scaler)
+            rows.append([f"{linger:g}", scaler_name,
+                         f"{r.fleet_energy_j:.1f}",
+                         f"{r.fleet_j_per_token:.4f}",
+                         f"{r.p99_latency_s:.3f}",
+                         f"{r.slo_attainment(SLO_S):.4f}"])
+    _write("autoscale_frontier",
+           ["linger_s", "autoscaler", "fleet_energy_j", "fleet_j_per_tok",
+            "p99_s", f"slo_att_{SLO_S:g}s"], rows)
+    return rows
+
+
+def smoke(n_queries: int = 120, model: str = "llama2-7b") -> None:
+    """CI gate (scripts/ci.sh): the two acceptance invariants, fixed seed."""
+    from dataclasses import replace
+
+    from repro.core import default_power_states
+
+    cfg = get_config(model)
+    _, perf = paper_fleet()
+    qs = _workload("diurnal", n_queries, rate=1.0, seed=5)
+    sched = lambda s=perf: SingleSystemScheduler(cfg, s)  # noqa: E731
+
+    # 1. static-fleet equivalence. Two non-trivial armed variants against the
+    # plain fleet: (a) an explicit power-state table attached to the profile
+    # with linger=inf and no autoscaler; (b) an ENGAGED machine (autoscaler
+    # ticking) whose min_instances floor equals the pool size, so it may
+    # never act. Both must be bit-for-bit the plain run.
+    plain = simulate_fleet(cfg, qs, {"perf": PoolSpec(perf, 4, 2)}, sched())
+    tabled = replace(perf, power_states=default_power_states(perf))
+    variants = {
+        "power-states attached, linger=inf": simulate_fleet(
+            cfg, qs, {"perf": PoolSpec(tabled, 4, 2, linger_s=math.inf)},
+            sched(tabled)),
+        "autoscaler engaged but floored": simulate_fleet(
+            cfg, qs, {"perf": PoolSpec(perf, 4, 2)}, sched(),
+            autoscaler=TargetUtilizationAutoscaler(period_s=10.0,
+                                                   min_instances=4)),
+    }
+    rel = 0.0
+    for name, armed in variants.items():
+        rel = abs(armed.fleet_energy_j - plain.fleet_energy_j) \
+            / plain.fleet_energy_j
+        assert rel < 1e-9, f"equivalence broken ({name}): rel={rel:.2e}"
+        for a, b in zip(armed.records, plain.records):
+            assert a.energy_j == b.energy_j, \
+                f"per-request energy drifted ({name}): rid={a.rid}"
+
+    # 2. energy proportionality: autoscaled diurnal fleet strictly cheaper
+    # per token at equal-or-better SLO attainment
+    auto = simulate_fleet(
+        cfg, qs, {"perf": PoolSpec(perf, 4, 2, linger_s=20.0)}, sched(),
+        autoscaler=TargetUtilizationAutoscaler(period_s=10.0, min_instances=1,
+                                               target_util=0.6))
+    assert len(auto.records) == len(qs), "autoscaled fleet lost requests"
+    att_s, att_a = plain.slo_attainment(SLO_S), auto.slo_attainment(SLO_S)
+    assert att_a >= att_s, f"SLO attainment regressed: {att_a} < {att_s}"
+    assert auto.fleet_j_per_token < plain.fleet_j_per_token, (
+        f"autoscaler failed to lower fleet J/token: "
+        f"{auto.fleet_j_per_token:.4f} >= {plain.fleet_j_per_token:.4f}")
+    saving = 1 - auto.fleet_j_per_token / plain.fleet_j_per_token
+    print(f"autoscale smoke OK: equivalence rel={rel:.1e}, diurnal fleet "
+          f"J/token -{saving:.0%} at SLO attainment {att_a:.2f} "
+          f"(static {att_s:.2f})")
+
+
+def main() -> None:
+    ap = argparse.ArgumentParser(description=__doc__)
+    ap.add_argument("--queries", type=int, default=400)
+    ap.add_argument("--model", default="llama2-7b")
+    ap.add_argument("--rate", type=float, default=1.0)
+    ap.add_argument("--smoke", action="store_true",
+                    help="tiny fixed-seed CI gate; asserts invariants")
+    args = ap.parse_args()
+
+    if args.smoke:
+        smoke(min(args.queries, 120), args.model)
+        return
+
+    print("== energy-vs-p99 frontier (diurnal, single perf pool) ==")
+    for row in frontier(args.queries, args.model, args.rate):
+        print(",".join(str(x) for x in row))
+
+    print("== process x linger x autoscaler sweep (hybrid fleet) ==")
+    for row in autoscale_sweep(args.queries, args.model, args.rate):
+        print(",".join(str(x) for x in row))
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,24 @@
+"""Shared helpers for the benchmark scripts.
+
+Import works both ways the scripts are run: standalone
+(``python benchmarks/foo.py`` puts this directory on ``sys.path``) and as a
+package module (``from benchmarks import foo`` via ``benchmarks/run.py``).
+"""
+from __future__ import annotations
+
+import os
+from typing import List
+
+OUT_DIR = os.path.join(os.path.dirname(__file__), "..", "experiments", "bench")
+
+
+def write_csv(name: str, header: List[str], rows: List[List],
+              out_dir: str = OUT_DIR) -> str:
+    """Write one benchmark artifact ``<out_dir>/<name>.csv``; returns path."""
+    os.makedirs(out_dir, exist_ok=True)
+    path = os.path.join(out_dir, f"{name}.csv")
+    with open(path, "w") as f:
+        f.write(",".join(header) + "\n")
+        for r in rows:
+            f.write(",".join(str(x) for x in r) + "\n")
+    return path

@@ -4,7 +4,6 @@ analytic model. One function per figure; each returns CSV rows
 """
 from __future__ import annotations
 
-import os
 from typing import List
 
 import numpy as np
@@ -17,21 +16,14 @@ from repro.core import (CostOptimalScheduler, CapacityAwareScheduler, Query,
                         paper_fleet, runtime, simulate, threshold_sweep,
                         throughput, token_histogram, tpu_fleet)
 
-OUT_DIR = os.path.join(os.path.dirname(__file__), "..", "experiments", "bench")
+try:
+    from benchmarks.bench_util import write_csv as _write
+except ImportError:                      # standalone: benchmarks/ on sys.path
+    from bench_util import write_csv as _write
 
 INPUT_SIZES = [8, 16, 32, 64, 128, 256, 512, 1024, 2048]      # paper 5.2.1
 OUTPUT_SIZES = [8, 16, 32, 64, 128, 256, 512, 1024, 2048, 4096]  # paper 5.2.2
 PAPER_MODELS = ("llama2-7b", "mistral-7b", "falcon-7b")
-
-
-def _write(name: str, header: List[str], rows: List[List]) -> str:
-    os.makedirs(OUT_DIR, exist_ok=True)
-    path = os.path.join(OUT_DIR, f"{name}.csv")
-    with open(path, "w") as f:
-        f.write(",".join(header) + "\n")
-        for r in rows:
-            f.write(",".join(str(x) for x in r) + "\n")
-    return path
 
 
 def fig1_input_tokens() -> List[List]:

@@ -1,0 +1,72 @@
+"""Energy-proportional fleet demo: power states + SLO-aware autoscaling.
+
+A diurnal workload (day/night arrival rate) runs against the same fleet
+three ways: static provisioning (every instance awake for the whole
+makespan — the paper's setting), linger-based sleep (instances drained of
+work descend to the profile's ``sleep`` power state and wake on demand),
+and a target-utilization autoscaler driving the awake-instance count at a
+control-loop cadence. The request-attributed energy barely moves; the
+allocated-idle energy — the dominant term at trough utilization — is what
+the power machine removes.
+
+Run: PYTHONPATH=src python examples/autoscaling.py [--queries 300]
+"""
+import argparse
+
+from repro.configs import get_config
+from repro.core import (PoolSpec, QueueDepthAutoscaler, SingleSystemScheduler,
+                        TargetUtilizationAutoscaler, WorkloadSpec,
+                        paper_fleet, sample_workload, simulate_fleet)
+
+SLO_S = 30.0
+
+
+def main():
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--queries", type=int, default=300)
+    ap.add_argument("--arch", default="llama2-7b")
+    args = ap.parse_args()
+
+    cfg = get_config(args.arch)
+    _, perf = paper_fleet()
+    # compressed day/night cycle so a few hundred queries span two troughs
+    qs = sample_workload(args.queries, seed=5, spec=WorkloadSpec(rate_qps=1.0),
+                         arrival_process="diurnal", period_s=240.0,
+                         amplitude=0.9)
+
+    configs = [
+        ("static fleet", PoolSpec(perf, 4, 2), None),
+        ("linger 20s", PoolSpec(perf, 4, 2, linger_s=20.0), None),
+        ("target-util autoscaler", PoolSpec(perf, 4, 2, linger_s=20.0),
+         TargetUtilizationAutoscaler(period_s=10.0, min_instances=1,
+                                     target_util=0.6)),
+        ("queue-depth autoscaler", PoolSpec(perf, 4, 2, linger_s=20.0),
+         QueueDepthAutoscaler(period_s=10.0, min_instances=1)),
+    ]
+
+    print(f"diurnal workload: {args.queries} queries, mean 1 qps, "
+          f"amplitude 0.9, period 240s — pool: 4x {perf.name} (2 slots)\n")
+    print(f"{'config':24s} {'fleet J/tok':>11s} {'attrib':>7s} {'idle':>9s} "
+          f"{'p99 s':>7s} {'SLO@30s':>7s} {'wakes':>5s} {'asleep':>6s}")
+    base, best = None, None
+    for name, spec, scaler in configs:
+        r = simulate_fleet(cfg, qs, {"perf": spec},
+                           SingleSystemScheduler(cfg, perf),
+                           policy_name=name, autoscaler=scaler)
+        p = r.per_pool["perf"]
+        asleep = p.sleep_s / (spec.instances * r.horizon_s)
+        if base is None:
+            base = r.fleet_j_per_token
+        if best is None or r.fleet_j_per_token < best[1]:
+            best = (name, r.fleet_j_per_token)
+        print(f"{name:24s} {r.fleet_j_per_token:11.3f} "
+              f"{r.total_energy_j:7.0f} {r.idle_energy_j:9.0f} "
+              f"{r.p99_latency_s:7.2f} {r.slo_attainment(SLO_S):7.2f} "
+              f"{p.wake_count:5d} {asleep:6.0%}")
+    print(f"\nsame requests, same routing: the power machine only removes "
+          f"allocated-idle draw\n(best fleet J/token vs static: "
+          f"-{1 - best[1] / base:.0%}, {best[0]}).")
+
+
+if __name__ == "__main__":
+    main()

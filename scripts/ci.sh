@@ -25,3 +25,10 @@ python benchmarks/fleet_sweep.py --smoke
 # prefix sharing) must stay token-for-token identical to the dense batcher
 # and show non-zero block reuse on a shared-prefix workload.
 python benchmarks/paged_serving.py --smoke
+
+# Energy-proportionality gate: with power states enabled but linger=inf and
+# the autoscaler off, the fleet must reproduce static-fleet energy
+# bit-for-bit (per-request and totals); under the diurnal workload the
+# autoscaled fleet must strictly lower fleet J/token vs the static fleet at
+# equal-or-better SLO attainment.
+python benchmarks/autoscale_sweep.py --smoke

@@ -1,7 +1,8 @@
 """core/: the paper's contribution — cost-based scheduling across a hybrid
 heterogeneous fleet for energy-efficient LLM inference."""
 from repro.core.systems import (SystemProfile, PROFILES, get_profile,
-                                paper_fleet, tpu_fleet)
+                                paper_fleet, tpu_fleet, PowerState,
+                                PowerStateTable, default_power_states)
 from repro.core.perf_model import runtime, throughput, query_phases
 from repro.core.energy import (energy, energy_per_token_in, energy_per_token_out,
                                crossover_threshold)
@@ -22,4 +23,6 @@ from repro.core.simulator import (simulate, summarize, threshold_sweep,
                                   optimal_threshold, headline, SimResult,
                                   SweepPoint, HeadlineResult)
 from repro.core.fleet import (FleetSimulator, FleetSimResult, PoolSpec,
-                              RequestRecord, PoolResult, simulate_fleet)
+                              RequestRecord, PoolResult, simulate_fleet,
+                              AutoscalerPolicy, TargetUtilizationAutoscaler,
+                              QueueDepthAutoscaler)

@@ -37,13 +37,28 @@ zero-load / infinite-capacity limit reduce *exactly* to the static
 and ``runtime(cfg, m, n, s)`` term by term. Idle (allocated-but-unused)
 energy over the makespan is reported separately as ``idle_energy_j`` so the
 request-attributed total stays comparable to the static path.
+
+Energy-proportional fleets: each instance additionally runs a power-state
+machine over the profile's ``active``/``idle``/``sleep``/``off`` table
+(``core.systems``). An instance drained of residents descends to
+``PoolSpec.sleep_state`` after ``linger_s`` of idleness; ``_refill`` wakes
+sleeping instances on demand (latency ``wake_s``, transition energy
+``wake_j`` — both charged into ``idle_energy_j``, where allocated-but-idle
+draw already lives). An optional ``AutoscalerPolicy`` (target-utilization or
+queue-depth variant) additionally drives each pool's awake-instance count
+between ``min_instances`` and ``PoolSpec.instances`` at a fixed control-loop
+cadence, emitting scale events into the same heap. With ``linger_s=inf``
+and no autoscaler the machine never engages and the simulation — per-request
+energies AND fleet totals — is bit-for-bit the static-fleet behavior (the
+equivalence invariant gated by tests and CI).
 """
 from __future__ import annotations
 
 import heapq
 import itertools
+import math
 from dataclasses import dataclass
-from typing import Dict, List, Optional, Sequence, Tuple
+from typing import Dict, List, Optional, Sequence, Tuple, Union
 
 import numpy as np
 
@@ -54,7 +69,12 @@ from repro.core.scheduler import (FleetState, PoolSnapshot, Scheduler,
 from repro.core.systems import SystemProfile
 from repro.core.workload import Query
 
-ARRIVAL, INSTANCE = 0, 1      # event kinds (INSTANCE = batch-step/completion)
+# event kinds: INSTANCE = batch-step/completion/wake/linger, CONTROL = autoscaler tick
+ARRIVAL, INSTANCE, CONTROL = 0, 1, 2
+
+# instance power-machine states. AWAKE/WAKING draw idle power when unused;
+# SLEEP/OFF names match the profile's PowerStateTable rows.
+AWAKE, WAKING, SLEEP, OFF = "awake", "waking", "sleep", "off"
 
 
 # ------------------------------------------------------------------ fleet spec
@@ -67,12 +87,26 @@ class PoolSpec:
     ``block_size`` tokens (the paged serving runtime's unit): a request is
     admitted only when its worst-case context ``ceil((m + n) / block_size)``
     fits in the instance's free blocks, so decode occupancy is bounded by
-    memory, not just the slot count. 0 = unbounded (pre-paging behavior)."""
+    memory, not just the slot count. 0 = unbounded (pre-paging behavior).
+
+    ``linger_s`` arms the power-state machine: an instance empty for that
+    long descends to ``sleep_state`` (``"sleep"`` or ``"off"`` in the
+    profile's power table) and is woken on demand. The default ``inf``
+    keeps every instance awake forever — the pre-power-management fleet."""
     system: SystemProfile
     instances: int = 1
     slots: int = 1
     kv_blocks: int = 0
     block_size: int = 16
+    linger_s: float = math.inf
+    sleep_state: str = SLEEP
+
+    def __post_init__(self):
+        if self.sleep_state not in (SLEEP, OFF):
+            raise ValueError(f"sleep_state must be {SLEEP!r} or {OFF!r}, "
+                             f"got {self.sleep_state!r}")
+        if self.linger_s < 0:
+            raise ValueError(f"linger_s must be >= 0, got {self.linger_s}")
 
     def blocks_needed(self, q: Query) -> int:
         if not self.kv_blocks:
@@ -109,10 +143,13 @@ class RequestRecord:
 class PoolResult:
     queries: int = 0
     energy_j: float = 0.0
-    idle_energy_j: float = 0.0
+    idle_energy_j: float = 0.0    # allocated idle + sleep draw + wake energy
     busy_slot_seconds: float = 0.0
     utilization: float = 0.0      # busy slot-seconds / (slots * horizon)
     peak_residents: int = 0       # max concurrent residents (occupancy bound)
+    wake_count: int = 0           # sleep/off -> awake transitions
+    wake_energy_j: float = 0.0    # one-shot transition energy (inside idle_energy_j)
+    sleep_s: float = 0.0          # instance-seconds spent in sleep/off (<= horizon)
 
 
 @dataclass
@@ -141,7 +178,22 @@ class FleetSimResult:
 
     @property
     def j_per_token(self) -> float:
+        """Request-attributed J/token only — EXCLUDES allocated-idle energy.
+        Comparable to the static per-query accounting, but it understates a
+        poorly-utilized fleet; use ``fleet_j_per_token`` to rank policies."""
         return self.total_energy_j / max(1, self.tokens)
+
+    @property
+    def fleet_j_per_token(self) -> float:
+        """Idle-inclusive J/token: (attributed + allocated-idle + wake)
+        energy over the makespan, per token — the headline fleet metric."""
+        return self.fleet_energy_j / max(1, self.tokens)
+
+    def slo_attainment(self, slo_s: float) -> float:
+        """Fraction of requests whose end-to-end latency met ``slo_s``."""
+        if not self.records:
+            return 1.0
+        return float(np.mean([r.latency_s <= slo_s for r in self.records]))
 
     def latency_percentile(self, p: float) -> float:
         if not self.records:
@@ -163,16 +215,70 @@ class FleetSimResult:
         return float(np.mean([r.wait_s for r in self.records]))
 
     def summary(self) -> Dict[str, float]:
-        return {
+        """Flat scalar summary (one CSV row): per-pool utilization appears
+        as ``util_<pool>`` keys, never as a nested dict."""
+        out = {
             "energy_j": self.total_energy_j,
             "fleet_energy_j": self.fleet_energy_j,
             "j_per_token": self.j_per_token,
+            "fleet_j_per_token": self.fleet_j_per_token,
             "p50_latency_s": self.p50_latency_s,
             "p99_latency_s": self.p99_latency_s,
             "mean_wait_s": self.mean_wait_s,
             "horizon_s": self.horizon_s,
-            "utilization": {n: p.utilization for n, p in self.per_pool.items()},
         }
+        for n, p in self.per_pool.items():
+            out[f"util_{n}"] = p.utilization
+        return out
+
+
+# ----------------------------------------------------------------- autoscaling
+@dataclass
+class AutoscalerPolicy:
+    """SLO-aware control loop over a pool's awake-instance count.
+
+    Every ``period_s`` the simulator snapshots the pool and asks
+    ``desired_awake``; the answer is clamped to
+    [``min_instances``, ``PoolSpec.instances``], then sleeping instances are
+    woken (scale-up) or drained idle instances are put to sleep
+    (scale-down). Demand wake in ``_refill`` can always override a low
+    target — the autoscaler shapes provisioned capacity, it never blocks
+    admission of queued work."""
+    period_s: float = 30.0
+    min_instances: int = 1
+
+    def desired_awake(self, snap: PoolSnapshot) -> int:
+        raise NotImplementedError
+
+
+@dataclass
+class TargetUtilizationAutoscaler(AutoscalerPolicy):
+    """Provision so current demand (busy slots + queued requests) lands at
+    ``target_util`` of the awake slot capacity."""
+    target_util: float = 0.6
+
+    def desired_awake(self, snap: PoolSnapshot) -> int:
+        demand = snap.busy_slots + snap.queue_len
+        per_instance = max(snap.slots_per_instance * self.target_util, 1e-9)
+        return int(math.ceil(demand / per_instance))
+
+
+@dataclass
+class QueueDepthAutoscaler(AutoscalerPolicy):
+    """Hysteresis on queue depth: wake one more instance when the queue
+    exceeds ``high`` requests per awake instance; sleep one when the queue
+    is at most ``low`` and a whole instance's worth of slots is idle."""
+    high: int = 2
+    low: int = 0
+
+    def desired_awake(self, snap: PoolSnapshot) -> int:
+        awake = snap.provisioned_instances
+        if snap.queue_len > self.high * max(1, awake):
+            return awake + 1
+        if (snap.queue_len <= self.low
+                and snap.busy_slots <= (awake - 1) * snap.slots_per_instance):
+            return awake - 1
+        return awake
 
 
 # ------------------------------------------------------------------- internals
@@ -206,7 +312,8 @@ class _Resident:
 
 class _Instance:
     __slots__ = ("pool", "iid", "slots", "residents", "last_t", "version",
-                 "busy_slot_seconds", "blocks_in_use")
+                 "busy_slot_seconds", "blocks_in_use", "state", "wake_done",
+                 "empty_since", "timeline", "wake_energy_j", "n_wakes")
 
     def __init__(self, pool: "_PoolRuntime", iid: int, slots: int):
         self.pool = pool
@@ -217,10 +324,44 @@ class _Instance:
         self.version = 0
         self.busy_slot_seconds = 0.0
         self.blocks_in_use = 0
+        # power-state machine: every instance starts awake (so a fleet with
+        # the machine disengaged IS the static fleet). ``timeline`` records
+        # (t, state) transitions for exact idle-power integration; a
+        # single-entry timeline means the instance never left AWAKE.
+        self.state = AWAKE
+        self.wake_done = 0.0
+        self.empty_since = 0.0
+        self.timeline: List[Tuple[float, str]] = [(0.0, AWAKE)]
+        self.wake_energy_j = 0.0
+        self.n_wakes = 0
 
     @property
     def free_slots(self) -> int:
         return self.slots - len(self.residents)
+
+    # ------------------------------------------------------ power transitions
+    def begin_wake(self, now: float) -> None:
+        """sleep/off -> waking: charge the one-shot transition energy and
+        hold the instance for the table's wake latency (idle draw is accrued
+        for the window by the timeline integration)."""
+        st = self.pool.spec.system.states().state(self.state)
+        self.wake_done = now + st.wake_s
+        self.wake_energy_j += st.wake_j
+        self.n_wakes += 1
+        self.state = WAKING
+        self.timeline.append((now, WAKING))
+
+    def finish_wake(self, now: float) -> None:
+        self.state = AWAKE
+        self.empty_since = now
+        self.timeline.append((now, AWAKE))
+
+    def go_sleep(self, now: float, state: str) -> None:
+        """awake -> sleep/off. Only drained instances descend."""
+        assert not self.residents and self.state == AWAKE
+        self.last_t = now
+        self.state = state
+        self.timeline.append((now, state))
 
     @property
     def free_blocks(self) -> int:
@@ -283,8 +424,18 @@ class _Instance:
         return done
 
     def next_event_time(self, model: CostModel, now: float) -> Optional[float]:
-        """Earliest upcoming prefill-finish or decode completion."""
+        """Earliest upcoming prefill-finish or decode completion; for the
+        power machine, the wake completion (waking) or the linger deadline
+        (empty + awake + finite linger). Sleeping instances are event-free
+        until woken."""
+        if self.state == WAKING:
+            return self.wake_done
+        if self.state in (SLEEP, OFF):
+            return None
         if not self.residents:
+            linger = self.pool.spec.linger_s
+            if self.pool.power_managed and np.isfinite(linger):
+                return self.empty_since + linger
             return None
         t = float("inf")
         decoding = [r for r in self.residents if r.prefill_end <= now + 1e-12]
@@ -302,12 +453,36 @@ class _PoolRuntime:
     def __init__(self, name: str, spec: PoolSpec):
         self.name = name
         self.spec = spec
+        # finite linger engages the power machine; the simulator also sets
+        # this for autoscaled pools. Disengaged = static-fleet behavior.
+        self.power_managed = bool(np.isfinite(spec.linger_s))
+        self.target_awake: Optional[int] = None   # autoscaler's current target
         self.instances = [_Instance(self, i, spec.slots)
                           for i in range(spec.instances)]
         # heap of (priority, seq, record, batch=1 service time)
         self.queue: List[Tuple[float, int, RequestRecord, float]] = []
         self.queued_service_s = 0.0      # running sum of queued service times
         self.result = PoolResult()
+
+    def awake_like(self) -> List[_Instance]:
+        """Provisioned capacity: awake plus already-waking instances."""
+        return [i for i in self.instances if i.state in (AWAKE, WAKING)]
+
+    def wake_delay(self, now: float) -> float:
+        """Expected extra delay before NEW capacity could serve an arrival:
+        0 with a free awake slot; else the soonest wake completion among
+        waking instances, or the fastest wake latency among sleeping ones
+        (a stuck arrival triggers a demand wake). 0 again when the pool has
+        nothing asleep — then the only path to a slot is a completion."""
+        if any(i.state == AWAKE and i.free_slots > 0 for i in self.instances):
+            return 0.0
+        cands = []
+        for i in self.instances:
+            if i.state == WAKING:
+                cands.append(max(0.0, i.wake_done - now))
+            elif i.state in (SLEEP, OFF):
+                cands.append(self.spec.system.states().state(i.state).wake_s)
+        return min(cands) if cands else 0.0
 
     def enqueue(self, key: float, seqno: int, rec: RequestRecord,
                 service_s: float) -> None:
@@ -322,9 +497,14 @@ class _PoolRuntime:
     def snapshot(self, model: CostModel, now: float) -> PoolSnapshot:
         busy = sum(len(i.residents) for i in self.instances)
         kv = self.spec.kv_blocks
+        provisioned = self.awake_like()
         # per-instance admission terms (see PoolSnapshot): a request lands on
         # ONE instance, so the admissibility signal is the most-free
-        # instance's headroom, not the pool aggregate
+        # instance's headroom, not the pool aggregate. Sleeping instances
+        # COUNT: a demand wake makes their blocks reachable within
+        # wake_delay_s (already folded into est_wait_s), so reporting a cold
+        # pool as block-starved would double-penalize it — the mem_wait_s
+        # pressure term prices ~a full service time on top of the wake.
         return PoolSnapshot(
             system=self.spec.system,
             instances=self.spec.instances,
@@ -335,18 +515,29 @@ class _PoolRuntime:
             free_blocks=max(i.free_blocks for i in self.instances) if kv else None,
             total_blocks=kv if kv else None,
             block_size=self.spec.block_size if kv else 0,
+            awake_instances=len(provisioned),
+            asleep_instances=self.spec.instances - len(provisioned),
+            wake_delay_s=self.wake_delay(now),
         )
 
     def est_wait(self, model: CostModel, now: float) -> float:
         """Estimated queueing delay for a new arrival: time until the next
-        slot frees, plus the queued backlog spread over all slots."""
-        total_slots = self.spec.instances * self.spec.slots
-        free = sum(i.free_slots for i in self.instances)
+        slot frees, plus the queued backlog spread over the provisioned
+        (awake + waking) slots. A cold pool is priced honestly: when no
+        awake slot is free the wake path — a waking instance's completion,
+        or the demand-wake latency of a sleeping one — competes with the
+        next decode completion for ``next_free``."""
+        provisioned = self.awake_like()
+        total_slots = len(provisioned) * self.spec.slots
+        free = sum(i.free_slots for i in provisioned if i.state == AWAKE)
         backlog = self.queued_service_s / max(1, total_slots)
         if free > 0:
             return backlog
-        nxt = [i.next_event_time(model, now) for i in self.instances]
+        nxt = [i.next_event_time(model, now) for i in provisioned]
         nxt = [t for t in nxt if t is not None]
+        wake = self.wake_delay(now)
+        if wake > 0:
+            nxt.append(now + wake)
         next_free = (min(nxt) - now) if nxt else 0.0
         return max(0.0, next_free) + backlog
 
@@ -358,11 +549,18 @@ class FleetSimulator:
 
     queue_discipline: 'fifo' (arrival order) or 'sjf' (shortest expected
     service first — priority queue on the analytic batch=1 runtime).
+
+    autoscaler: one ``AutoscalerPolicy`` applied to every pool, or a
+    {pool name: policy} mapping for a subset. Autoscaled pools get CONTROL
+    events at the policy's cadence; pools left out (and all pools when None)
+    keep static provisioning unless their ``linger_s`` is finite.
     """
 
     def __init__(self, cfg: ModelConfig, pools: Dict[str, PoolSpec],
                  scheduler: Scheduler, *, queue_discipline: str = "fifo",
-                 model: Optional[CostModel] = None):
+                 model: Optional[CostModel] = None,
+                 autoscaler: Union[AutoscalerPolicy,
+                                   Dict[str, AutoscalerPolicy], None] = None):
         if queue_discipline not in ("fifo", "sjf"):
             raise ValueError(f"unknown queue discipline {queue_discipline!r}")
         self.cfg = cfg
@@ -371,6 +569,17 @@ class FleetSimulator:
         self.model = model if model is not None \
             else getattr(scheduler, "model", None) or CostModel(cfg, AnalyticOracle())
         self.pools = {n: _PoolRuntime(n, spec) for n, spec in pools.items()}
+        if autoscaler is None:
+            self._autoscalers: Dict[str, AutoscalerPolicy] = {}
+        elif isinstance(autoscaler, dict):
+            unknown = set(autoscaler) - set(pools)
+            if unknown:
+                raise KeyError(f"autoscaler for unknown pool(s) {sorted(unknown)}")
+            self._autoscalers = dict(autoscaler)
+        else:
+            self._autoscalers = {n: autoscaler for n in pools}
+        for name in self._autoscalers:
+            self.pools[name].power_managed = True
         self.scheduler = scheduler
         self.queue_discipline = queue_discipline
         self._by_system = {spec.system.name: n for n, spec in pools.items()}
@@ -395,10 +604,23 @@ class FleetSimulator:
 
         records: List[RequestRecord] = []
         self._horizon = 0.0
+        self._arrival_times = [e[0] for e in sorted(events)]
+        self._arrivals_left = len(events)
+
+        # arm the power machine: linger timers for initially-empty instances
+        # and the first control tick per autoscaled pool. Disengaged pools
+        # (infinite linger, no autoscaler) schedule nothing here.
+        for pool in self.pools.values():
+            if pool.power_managed and np.isfinite(pool.spec.linger_s):
+                for inst in pool.instances:
+                    self._reschedule(inst, 0.0, events, seq)
+        for name, policy in self._autoscalers.items():
+            heapq.heappush(events, (policy.period_s, next(seq), CONTROL, name))
 
         while events:
             t, _, kind, payload = heapq.heappop(events)
             if kind == ARRIVAL:
+                self._arrivals_left -= 1
                 rid, q = payload
                 pool = self._dispatch(q, t)
                 need = pool.spec.blocks_needed(q)
@@ -414,14 +636,19 @@ class FleetSimulator:
                 key = svc if self.queue_discipline == "sjf" else t
                 pool.enqueue(key, next(seq), rec, svc)
                 self._refill(pool, t, events, seq)
-            else:                                   # INSTANCE batch-step
+            elif kind == INSTANCE:                  # batch-step/wake/linger
                 inst, version = payload
                 if version != inst.version:
                     continue                        # stale event
                 inst.advance(model, t)
+                if inst.state == WAKING and t >= inst.wake_done - 1e-12:
+                    inst.finish_wake(t)
                 self._complete(inst, t)
                 self._refill(inst.pool, t, events, seq)
+                self._maybe_descend(inst, t)
                 self._reschedule(inst, t, events, seq)
+            else:                                   # CONTROL autoscaler tick
+                self._control(self.pools[payload], t, events, seq)
 
         return self._finalize(records, self._horizon,
                               policy_name or type(self.scheduler).__name__)
@@ -441,22 +668,34 @@ class FleetSimulator:
         return self.pools[name]
 
     def _complete(self, inst: _Instance, now: float) -> None:
-        for r in inst.pop_finished(now):
+        done = inst.pop_finished(now)
+        for r in done:
             r.rec.t_done = now
             self._horizon = max(self._horizon, now)
+        if done and not inst.residents:
+            inst.empty_since = now      # linger clock starts on drain
 
     def _refill(self, pool: _PoolRuntime, now: float, events, seq) -> None:
-        """Admit queued requests into free slots (least-loaded instance).
+        """Admit queued requests into free slots (least-loaded awake
+        instance); the admissibility set is re-evaluated after every
+        admission — ``_complete`` on the chosen instance may have freed
+        blocks only after the previous check.
 
         Block-capacity admission: with ``kv_blocks`` set, the head request is
         admitted only to an instance whose free blocks cover its worst-case
-        context — a free slot alone is not capacity. The head waits otherwise
-        (head-of-line, matching the paged batcher's FIFO admission)."""
+        context — a free slot alone is not capacity. Before the head is made
+        to wait, completions due at exactly ``now`` on *other* instances are
+        settled (``_settle``) so capacity freed in the same tick is used in
+        the same tick; if the pool is still stuck, sleeping instances are
+        demand-woken to cover the queue."""
         while pool.queue:
             need = pool.spec.blocks_needed(pool.queue[0][2].query)
             ready = [i for i in pool.instances
-                     if i.free_slots > 0 and i.fits(need)]
+                     if i.state == AWAKE and i.free_slots > 0 and i.fits(need)]
             if not ready:
+                if self._settle(pool, now, events, seq):
+                    continue            # freed capacity: re-evaluate the head
+                self._demand_wake(pool, now, events, seq)
                 break
             inst = min(ready, key=lambda i: len(i.residents))
             rec = pool.dequeue()
@@ -471,6 +710,118 @@ class FleetSimulator:
                 pool.result.peak_residents,
                 sum(len(i.residents) for i in pool.instances))
             self._reschedule(inst, now, events, seq)
+
+    def _settle(self, pool: _PoolRuntime, now: float, events, seq) -> bool:
+        """Advance + complete every resident-holding instance to ``now`` and
+        report whether any slot or block freed. A completion due at exactly
+        ``now`` can still sit in the event heap (same timestamp, later
+        sequence number) while the head-of-line request is evaluated — its
+        slots/blocks must count as capacity in this tick, not the next.
+        Advancing here is exact: ``now`` is an event boundary, so no
+        resident crosses prefill->decode strictly inside the interval."""
+        freed = False
+        for i in pool.instances:
+            if not i.residents:
+                continue
+            before = (len(i.residents), i.blocks_in_use)
+            i.advance(self.model, now)
+            self._complete(i, now)
+            if (len(i.residents), i.blocks_in_use) != before:
+                self._reschedule(i, now, events, seq)
+                freed = True
+        return freed
+
+    def _demand_wake(self, pool: _PoolRuntime, now: float, events, seq) -> None:
+        """Wake sleeping instances to cover the queue. Demand overrides the
+        autoscaler target (SLO protection): the control loop shapes
+        provisioned capacity, it never strands queued work. Reached only
+        when no awake instance can admit the head — whether slot-bound or
+        block-bound — so a block-bound stall wakes a (block-free) sleeping
+        instance instead of waiting out a resident's decode."""
+        if not pool.power_managed or not pool.queue:
+            return
+        # no awake free-slot capacity can fit the head here (that is what
+        # made _refill stick), so the queue's only incoming capacity is
+        # instances already waking
+        incoming = sum(i.slots for i in pool.instances if i.state == WAKING)
+        self._wake_sleeping(pool, len(pool.queue) - incoming, now, events, seq)
+
+    def _wake_sleeping(self, pool: _PoolRuntime, slot_deficit: int,
+                       now: float, events, seq) -> None:
+        """Begin waking sleeping/off instances, fastest wake first, until
+        their slots cover ``slot_deficit``."""
+        if slot_deficit <= 0:
+            return
+        table = pool.spec.system.states()
+        asleep = sorted((i for i in pool.instances if i.state in (SLEEP, OFF)),
+                        key=lambda i: table.state(i.state).wake_s)
+        for i in asleep:
+            if slot_deficit <= 0:
+                break
+            i.begin_wake(now)
+            self._reschedule(i, now, events, seq)
+            slot_deficit -= i.slots
+
+    def _maybe_descend(self, inst: _Instance, now: float) -> None:
+        """Drained-instance descent: immediately when the pool is over its
+        autoscaler target, at the linger deadline otherwise. The caller
+        reschedules, which also invalidates any pending timer."""
+        pool = inst.pool
+        if (not pool.power_managed or inst.state != AWAKE or inst.residents
+                or pool.queue):
+            return
+        if (pool.target_awake is not None
+                and len(pool.awake_like()) > pool.target_awake):
+            inst.go_sleep(now, pool.spec.sleep_state)
+            return
+        linger = pool.spec.linger_s
+        if np.isfinite(linger) and now >= inst.empty_since + linger - 1e-12:
+            inst.go_sleep(now, pool.spec.sleep_state)
+
+    def _control(self, pool: _PoolRuntime, now: float, events, seq) -> None:
+        """One autoscaler tick: clamp the policy's desired awake count to
+        [min_instances, instances], wake or drain toward it, and keep
+        ticking while work remains anywhere in the fleet (the loop must not
+        hold the event heap open forever on an idle fleet)."""
+        policy = self._autoscalers[pool.name]
+        snap = pool.snapshot(self.model, now)
+        lo = max(0, min(policy.min_instances, pool.spec.instances))
+        target = max(lo, min(pool.spec.instances, policy.desired_awake(snap)))
+        pool.target_awake = target
+        awake = pool.awake_like()
+        if len(awake) < target:
+            self._wake_sleeping(pool, (target - len(awake)) * pool.spec.slots,
+                                now, events, seq)
+        elif len(awake) > target and not pool.queue:
+            surplus = len(awake) - target
+            idlers = sorted((i for i in awake
+                             if i.state == AWAKE and not i.residents),
+                            key=lambda i: i.empty_since)
+            for i in idlers[:surplus]:
+                i.go_sleep(now, pool.spec.sleep_state)
+                self._reschedule(i, now, events, seq)
+        if self._work_remaining():
+            nxt = now + policy.period_s
+            if not self._fleet_busy():
+                # fleet fully drained, only future arrivals remain: skip the
+                # empty gap instead of ticking through it (a trace with an
+                # hours-long lull would otherwise cost thousands of no-op
+                # snapshots)
+                nxt = max(nxt, self._next_arrival_s())
+            heapq.heappush(events, (nxt, next(seq), CONTROL, pool.name))
+
+    def _fleet_busy(self) -> bool:
+        return any(p.queue or any(i.residents for i in p.instances)
+                   for p in self.pools.values())
+
+    def _next_arrival_s(self) -> float:
+        if self._arrivals_left <= 0:
+            return 0.0
+        return self._arrival_times[len(self._arrival_times)
+                                   - self._arrivals_left]
+
+    def _work_remaining(self) -> bool:
+        return self._arrivals_left > 0 or self._fleet_busy()
 
     def _reschedule(self, inst: _Instance, now: float, events, seq) -> None:
         inst.version += 1
@@ -488,20 +839,61 @@ class FleetSimulator:
             p.result.energy_j = sum(r.energy_j for r in records if r.pool == n)
             if horizon > 0:
                 p.result.utilization = busy / (total_slots * horizon)
-                idle_slot_s = total_slots * horizon - busy
-                # allocated-idle power per slot: instance idle power / slots
-                p.result.idle_energy_j = (idle_slot_s *
-                                          p.spec.system.power(0.0) / p.spec.slots)
+                if all(len(i.timeline) == 1 for i in p.instances):
+                    # power machine never engaged: the historical pooled
+                    # formula, bit-for-bit (the static-fleet equivalence
+                    # invariant). Allocated-idle power per slot: instance
+                    # idle power / slots.
+                    idle_slot_s = total_slots * horizon - busy
+                    p.result.idle_energy_j = (
+                        idle_slot_s * p.spec.system.power(0.0) / p.spec.slots)
+                else:
+                    self._integrate_power(p, horizon)
             per_pool[n] = p.result
         return FleetSimResult(policy, records, per_pool, horizon)
+
+    def _integrate_power(self, p: _PoolRuntime, horizon: float) -> None:
+        """Exact idle-side energy over [0, horizon] from each instance's
+        power-state timeline: awake/waking segments draw instance idle power
+        (minus the busy share already attributed to residents), sleep/off
+        segments draw the table's state power, and each wake adds its
+        one-shot transition energy. Transitions after the horizon (e.g. a
+        linger descent scheduled past the last completion) fall outside the
+        accounting window and contribute nothing."""
+        s = p.spec.system
+        p_idle = s.power(0.0)
+        idle = sleep_s = wake_j = 0.0
+        wakes = 0
+        for i in p.instances:
+            segs = i.timeline + [(horizon, "end")]
+            for (t0, st), (t1, _) in zip(segs, segs[1:]):
+                dur = min(t1, horizon) - min(t0, horizon)
+                if dur <= 0:
+                    continue
+                if st in (AWAKE, WAKING):
+                    idle += dur * p_idle
+                else:
+                    idle += dur * s.state_power(st)
+                    sleep_s += dur
+            idle -= i.busy_slot_seconds * p_idle / p.spec.slots
+            idle += i.wake_energy_j
+            wake_j += i.wake_energy_j
+            wakes += i.n_wakes
+        p.result.idle_energy_j = idle
+        p.result.sleep_s = sleep_s
+        p.result.wake_energy_j = wake_j
+        p.result.wake_count = wakes
 
 
 def simulate_fleet(cfg: ModelConfig, queries: Sequence[Query],
                    pools: Dict[str, PoolSpec], scheduler: Scheduler, *,
                    queue_discipline: str = "fifo",
                    policy_name: Optional[str] = None,
-                   model: Optional[CostModel] = None) -> FleetSimResult:
+                   model: Optional[CostModel] = None,
+                   autoscaler: Union[AutoscalerPolicy,
+                                     Dict[str, AutoscalerPolicy],
+                                     None] = None) -> FleetSimResult:
     """One-call wrapper: build a FleetSimulator and run the workload."""
     return FleetSimulator(cfg, pools, scheduler,
-                          queue_discipline=queue_discipline, model=model
-                          ).run(queries, policy_name)
+                          queue_discipline=queue_discipline, model=model,
+                          autoscaler=autoscaler).run(queries, policy_name)

@@ -77,10 +77,32 @@ class PoolSnapshot:
     free_blocks: Optional[int] = None
     total_blocks: Optional[int] = None
     block_size: int = 0
+    # Power-management state (energy-proportional fleets). ``awake_instances``
+    # counts instances that are awake or already waking (provisioned
+    # capacity); None means the pool reports no power management — every
+    # instance is awake, which keeps pre-power snapshot producers valid
+    # unchanged. ``wake_delay_s`` is the expected extra delay before NEW
+    # capacity could serve an arrival (0 with a free awake slot); producers
+    # fold it into ``est_wait_s`` as well, so queue-aware policies price a
+    # cold pool honestly without double counting.
+    awake_instances: Optional[int] = None
+    asleep_instances: int = 0
+    wake_delay_s: float = 0.0
 
     @property
     def total_slots(self) -> int:
         return self.instances * self.slots_per_instance
+
+    @property
+    def provisioned_instances(self) -> int:
+        """Awake + waking instances; all of them absent power management."""
+        return (self.awake_instances if self.awake_instances is not None
+                else self.instances)
+
+    @property
+    def awake_slots(self) -> int:
+        """Slot capacity that is provisioned right now (awake or waking)."""
+        return self.provisioned_instances * self.slots_per_instance
 
     @property
     def free_slots(self) -> int:
@@ -260,6 +282,10 @@ class CapacityAwareScheduler(Scheduler):
         pressure term when the pool reports block occupancy — a pool with
         free slots but no free blocks is priced like a backed-up pool, so
         memory-bound pools shed load before head-of-line blocking builds.
+        Power-managed pools are priced just as honestly: their snapshot's
+        ``est_wait_s`` already folds in ``wake_delay_s`` (the latency of
+        waking sleeping capacity), so a cold pool competes at its true
+        time-to-first-token, not as if its sleeping instances were free.
         Without a snapshot the internal reservation heap is read (not
         written) for the wait."""
         if fleet is None:

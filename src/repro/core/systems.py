@@ -10,11 +10,59 @@ Power constants: vendor TDP where published, otherwise documented estimates
 (marked ~). The paper's central phenomenon — an efficiency-class device with
 lower J/token below a workload threshold — depends on the *ratio* of idle
 power to peak and on per-query software overhead, not on exact wattages.
+
+Power states: allocated-but-idle draw dominates fleet energy at low
+utilization (Samsi et al., "From Words to Watts"), so a profile also carries
+a four-state power table (``active`` / ``idle`` / ``sleep`` / ``off``) with
+per-state draw, wake latency, and wake energy. The fleet simulator's
+power-state machine (``core.fleet``) descends drained instances into
+``sleep``/``off`` and charges the transition costs on wake; with no table
+attached, ``default_power_states`` derives one from the profile's
+peak/idle constants.
 """
 from __future__ import annotations
 
+import functools
 from dataclasses import dataclass, replace
 from typing import Dict, Optional, Tuple
+
+POWER_STATES = ("active", "idle", "sleep", "off")
+
+
+@dataclass(frozen=True)
+class PowerState:
+    """One row of a profile's power-state table.
+
+    ``power_w`` is per chip (multiply by ``SystemProfile.chips`` for the
+    instance draw, as with ``power_peak``/``power_idle``). ``wake_s`` /
+    ``wake_j`` are the latency and one-shot energy (per *instance*) of the
+    transition from this state back to ``idle``; during that window the
+    instance additionally draws idle power (it is powering up), so
+    ``wake_j`` is only the above-idle transition surcharge."""
+    name: str
+    power_w: float
+    wake_s: float = 0.0
+    wake_j: float = 0.0
+
+
+@dataclass(frozen=True)
+class PowerStateTable:
+    """Per-profile ``active``/``idle``/``sleep``/``off`` table.
+
+    ``active``/``idle`` draws must agree with the profile's
+    ``power_peak``/``power_idle`` (the utilization-linear ``power()`` model
+    interpolates between them); ``sleep``/``off`` are the states the fleet
+    power machine can descend a drained instance into."""
+    active: PowerState
+    idle: PowerState
+    sleep: PowerState
+    off: PowerState
+
+    def state(self, name: str) -> PowerState:
+        if name not in POWER_STATES:
+            raise KeyError(f"unknown power state {name!r}; "
+                           f"choose from {POWER_STATES}")
+        return getattr(self, name)
 
 
 @dataclass(frozen=True)
@@ -39,6 +87,10 @@ class SystemProfile:
     # without "significant runtime penalties".
     sat_ctx: Optional[float] = None
     max_out_tokens: int = 0   # advisory output cap (0 = unlimited)
+    # Optional explicit power-state table; None = derive on demand from the
+    # peak/idle constants (``default_power_states``). Kept Optional so every
+    # pre-power-management profile (and its hash/equality) is unchanged.
+    power_states: Optional[PowerStateTable] = None
 
     def degradation(self, ctx: float) -> float:
         if self.sat_ctx is None:
@@ -57,6 +109,44 @@ class SystemProfile:
         """Instance power draw (W) at compute utilization in [0, 1]."""
         util = min(max(util, 0.0), 1.0)
         return self.chips * (self.power_idle + (self.power_peak - self.power_idle) * util)
+
+    def states(self) -> PowerStateTable:
+        """This profile's power-state table (explicit or derived)."""
+        if self.power_states is not None:
+            return self.power_states
+        return default_power_states(self)
+
+    def state_power(self, name: str) -> float:
+        """Instance draw (W) in the named power state."""
+        return self.chips * self.states().state(name).power_w
+
+
+@functools.lru_cache(maxsize=None)
+def default_power_states(profile: SystemProfile, *,
+                         sleep_frac: float = 0.12,
+                         sleep_wake_s: float = 5.0,
+                         off_wake_s: float = 60.0) -> PowerStateTable:
+    """Derive a power-state table from a profile's peak/idle constants
+    (memoized — profiles are frozen/hashable and the fleet simulator asks
+    per arrival).
+
+    Estimates (marked ~ like the profile wattages themselves): ``sleep``
+    retains ~12% of idle draw (suspended host, powered links, self-refresh
+    HBM); ``off`` draws nothing but takes a full reboot to return. Wake
+    energy is the above-idle surcharge of re-initializing the part, modeled
+    as half the idle-to-peak gap sustained over the wake latency — the fleet
+    machine separately charges idle draw for the wake window, so the table
+    stays consistent whichever latency is configured."""
+    idle_w, peak_w = profile.power_idle, profile.power_peak
+    surge_w = 0.5 * (peak_w - idle_w) * profile.chips     # per instance
+    return PowerStateTable(
+        active=PowerState("active", peak_w),
+        idle=PowerState("idle", idle_w),
+        sleep=PowerState("sleep", sleep_frac * idle_w,
+                         wake_s=sleep_wake_s, wake_j=surge_w * sleep_wake_s),
+        off=PowerState("off", 0.0,
+                       wake_s=off_wake_s, wake_j=surge_w * off_wake_s),
+    )
 
 
 # --------------------------------------------------------------------------- TPU

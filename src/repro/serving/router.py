@@ -153,13 +153,21 @@ class FleetRouter:
                                            sysp)
                     backlog += ph.t_decode / max(1, r.max_new_tokens) * rem
                 est_wait = backlog / max(1, slots)
+            # mirror the fleet simulator's awake-count view: serving pools
+            # run hot (no power machine in front of a live batcher), so every
+            # instance is awake and waking capacity is never pending — but
+            # policies validated against power-managed simulations read the
+            # same fields here and need no serving-side special case.
+            n_inst = self.counts.get(sysp.name, 1)
             snaps[name] = PoolSnapshot(
-                system=sysp, instances=self.counts.get(sysp.name, 1),
+                system=sysp, instances=n_inst,
                 slots_per_instance=slots, busy_slots=busy,
                 queue_len=queue_len, est_wait_s=est_wait,
                 free_blocks=getattr(cb, "free_blocks", None),
                 total_blocks=getattr(cb, "total_blocks", None),
-                block_size=getattr(cb, "block_size", 0))
+                block_size=getattr(cb, "block_size", 0),
+                awake_instances=n_inst, asleep_instances=0,
+                wake_delay_s=0.0)
         return FleetState(time_s=now, pools=snaps)
 
     # --------------------------------------------------------------- routing

@@ -1,0 +1,471 @@
+"""Energy-proportional fleets: power-state tables, the instance sleep/wake
+machine, SLO-aware autoscaling, and the energy-accounting fixes that ride
+along (idle-inclusive J/token, flat summaries, same-tick refill, float-dust
+consistency at large simulated time)."""
+import math
+
+import numpy as np
+import pytest
+
+from repro.configs import get_config
+from repro.core import (CapacityAwareScheduler, FleetSimulator, FleetState,
+                        PoolSnapshot, PoolSpec, PowerState, PowerStateTable,
+                        Query, QueueDepthAutoscaler, SingleSystemScheduler,
+                        TargetUtilizationAutoscaler, ThresholdScheduler,
+                        WorkloadSpec, default_power_states, paper_fleet,
+                        sample_workload, simulate_fleet)
+from repro.core.cost import normalized_cost_params
+from repro.core.fleet import SLEEP, _Resident
+
+CFG = get_config("deepseek-7b")
+EFF, PERF = paper_fleet()
+SLO_S = 30.0
+
+
+def _diurnal(n=120, seed=5, rate=1.0):
+    """Compressed day/night cycle: n queries span multiple troughs."""
+    return sample_workload(n, seed=seed, spec=WorkloadSpec(rate_qps=rate),
+                           arrival_process="diurnal", period_s=240.0,
+                           amplitude=0.9)
+
+
+# ------------------------------------------------------------ power-state table
+def test_default_power_states_consistent_with_profile():
+    for prof in (EFF, PERF):
+        t = default_power_states(prof)
+        assert t.active.power_w == prof.power_peak
+        assert t.idle.power_w == prof.power_idle
+        assert 0.0 < t.sleep.power_w < prof.power_idle
+        assert t.off.power_w == 0.0
+        assert t.off.wake_s > t.sleep.wake_s > 0.0
+        assert t.off.wake_j > t.sleep.wake_j > 0.0
+        # profile accessors: derived table when none attached, instance watts
+        assert prof.states() == t
+        assert prof.state_power("sleep") == prof.chips * t.sleep.power_w
+    with pytest.raises(KeyError):
+        default_power_states(PERF).state("hibernate")
+
+
+def test_explicit_power_states_override():
+    from dataclasses import replace
+    table = PowerStateTable(
+        active=PowerState("active", PERF.power_peak),
+        idle=PowerState("idle", PERF.power_idle),
+        sleep=PowerState("sleep", 1.0, wake_s=2.0, wake_j=10.0),
+        off=PowerState("off", 0.0, wake_s=9.0, wake_j=99.0))
+    prof = replace(PERF, name="perf-custom", power_states=table)
+    assert prof.states() is table
+    assert prof.state_power("sleep") == prof.chips * 1.0
+
+
+def test_pool_spec_validates_power_fields():
+    with pytest.raises(ValueError):
+        PoolSpec(PERF, 1, 1, sleep_state="hibernate")
+    with pytest.raises(ValueError):
+        PoolSpec(PERF, 1, 1, linger_s=-1.0)
+
+
+# ------------------------------------------------- static-fleet equivalence
+def test_equivalence_invariant_linger_inf_no_autoscaler():
+    """Acceptance: power states enabled — an explicit table attached to the
+    profile — but linger=inf and autoscaler off reproduces the plain
+    fleet's per-request energies and fleet totals to <1e-9 rel (they are in
+    fact bit-for-bit: the machine never engages)."""
+    from dataclasses import replace
+    qs = sample_workload(80, seed=7, spec=WorkloadSpec(rate_qps=3.0),
+                         arrival_process="mmpp")
+    eff_t = replace(EFF, power_states=default_power_states(EFF))
+    perf_t = replace(PERF, power_states=default_power_states(PERF))
+    plain = simulate_fleet(cfg=CFG, queries=qs,
+                           pools={"eff": PoolSpec(EFF, 3, 2),
+                                  "perf": PoolSpec(PERF, 2, 4)},
+                           scheduler=ThresholdScheduler(CFG, EFF, PERF, t_in=32))
+    armed = simulate_fleet(cfg=CFG, queries=qs,
+                           pools={"eff": PoolSpec(eff_t, 3, 2, linger_s=math.inf),
+                                  "perf": PoolSpec(perf_t, 2, 4, linger_s=math.inf)},
+                           scheduler=ThresholdScheduler(CFG, eff_t, perf_t,
+                                                        t_in=32))
+    assert abs(armed.fleet_energy_j - plain.fleet_energy_j) \
+        <= 1e-9 * plain.fleet_energy_j
+    assert abs(armed.idle_energy_j - plain.idle_energy_j) \
+        <= 1e-9 * max(plain.idle_energy_j, 1.0)
+    for a, b in zip(armed.records, plain.records):
+        assert a.energy_j == b.energy_j
+        assert a.t_done == b.t_done
+    for p in armed.per_pool.values():
+        assert p.wake_count == 0 and p.sleep_s == 0.0
+
+
+# ------------------------------------------------------- sleep/wake mechanics
+def test_linger_descent_and_demand_wake():
+    """One instance, two queries separated by a gap >> linger: the instance
+    sleeps in between, the second request pays the wake latency, and the
+    wake energy lands in idle_energy_j."""
+    gap = 200.0
+    qs = [Query(32, 32, 0.0), Query(32, 32, gap)]
+    spec = PoolSpec(PERF, 1, 1, linger_s=10.0)
+    r = simulate_fleet(CFG, qs, {"perf": spec}, SingleSystemScheduler(CFG, PERF))
+    p = r.per_pool["perf"]
+    table = PERF.states()
+    assert p.wake_count == 1
+    assert p.sleep_s > 100.0                       # slept through most of the gap
+    assert p.wake_energy_j == table.sleep.wake_j
+    # second request waits exactly the wake latency (no queue otherwise)
+    second = max(r.records, key=lambda x: x.t_arrival)
+    assert second.wait_s == pytest.approx(table.sleep.wake_s, rel=1e-9)
+    # energy-proportionality: strictly cheaper than the static fleet, by
+    # roughly the sleep window's idle-vs-sleep power gap minus the wake cost
+    st = simulate_fleet(CFG, qs, {"perf": PoolSpec(PERF, 1, 1)},
+                        SingleSystemScheduler(CFG, PERF))
+    assert r.fleet_energy_j < st.fleet_energy_j
+    saved = p.sleep_s * (PERF.power(0.0) - PERF.state_power("sleep"))
+    extra = table.sleep.wake_j + table.sleep.wake_s * PERF.power(0.0)
+    assert r.fleet_energy_j == pytest.approx(
+        st.fleet_energy_j - saved + extra, rel=1e-6)
+
+
+def test_sleep_state_off_uses_off_row():
+    gap = 400.0
+    qs = [Query(32, 32, 0.0), Query(32, 32, gap)]
+    spec = PoolSpec(PERF, 1, 1, linger_s=10.0, sleep_state="off")
+    r = simulate_fleet(CFG, qs, {"perf": spec}, SingleSystemScheduler(CFG, PERF))
+    p = r.per_pool["perf"]
+    table = PERF.states()
+    assert p.wake_count == 1
+    assert p.wake_energy_j == table.off.wake_j
+    second = max(r.records, key=lambda x: x.t_arrival)
+    assert second.wait_s == pytest.approx(table.off.wake_s, rel=1e-9)
+
+
+def test_all_queries_complete_under_power_management():
+    qs = sample_workload(100, seed=2, spec=WorkloadSpec(rate_qps=4.0),
+                         arrival_process="mmpp")
+    r = simulate_fleet(CFG, qs,
+                       {"eff": PoolSpec(EFF, 3, 2, linger_s=5.0),
+                        "perf": PoolSpec(PERF, 2, 4, linger_s=5.0)},
+                       ThresholdScheduler(CFG, EFF, PERF, t_in=32))
+    assert len(r.records) == len(qs)
+    for rec in r.records:
+        assert rec.t_done > rec.t_start >= rec.t_arrival
+        assert rec.energy_j > 0
+
+
+# ------------------------------------------------------------------ autoscaler
+def test_autoscaler_lowers_fleet_j_per_token_at_equal_slo():
+    """Acceptance: under the diurnal workload the autoscaler strictly lowers
+    fleet J/token vs. the static fleet at equal p99 SLO attainment."""
+    qs = _diurnal()
+    st = simulate_fleet(CFG, qs, {"perf": PoolSpec(PERF, 4, 2)},
+                        SingleSystemScheduler(CFG, PERF))
+    au = simulate_fleet(CFG, qs, {"perf": PoolSpec(PERF, 4, 2, linger_s=20.0)},
+                        SingleSystemScheduler(CFG, PERF),
+                        autoscaler=TargetUtilizationAutoscaler(
+                            period_s=10.0, min_instances=1, target_util=0.6))
+    assert len(au.records) == len(qs)
+    assert au.slo_attainment(SLO_S) >= st.slo_attainment(SLO_S)
+    assert au.fleet_j_per_token < st.fleet_j_per_token
+    assert au.per_pool["perf"].sleep_s > 0
+
+
+def test_queue_depth_autoscaler_scales_and_completes():
+    qs = _diurnal(n=100, seed=9)
+    r = simulate_fleet(CFG, qs, {"perf": PoolSpec(PERF, 4, 2)},
+                       SingleSystemScheduler(CFG, PERF),
+                       autoscaler=QueueDepthAutoscaler(period_s=10.0,
+                                                       min_instances=1))
+    assert len(r.records) == len(qs)
+    assert r.per_pool["perf"].sleep_s > 0
+    st = simulate_fleet(CFG, qs, {"perf": PoolSpec(PERF, 4, 2)},
+                        SingleSystemScheduler(CFG, PERF))
+    assert r.fleet_energy_j < st.fleet_energy_j
+
+
+def test_autoscaler_min_instances_floor():
+    """min_instances = instances: the control loop runs (machine engaged)
+    but can never scale down — the fleet must stay bit-for-bit static."""
+    qs = _diurnal(n=60, seed=3)
+    au = simulate_fleet(CFG, qs, {"perf": PoolSpec(PERF, 3, 2)},
+                        SingleSystemScheduler(CFG, PERF),
+                        autoscaler=TargetUtilizationAutoscaler(
+                            period_s=10.0, min_instances=3, target_util=0.6))
+    st = simulate_fleet(CFG, qs, {"perf": PoolSpec(PERF, 3, 2)},
+                        SingleSystemScheduler(CFG, PERF))
+    p = au.per_pool["perf"]
+    assert p.sleep_s == 0.0 and p.wake_count == 0
+    assert au.fleet_energy_j == st.fleet_energy_j
+    for a, b in zip(au.records, st.records):
+        assert a.energy_j == b.energy_j and a.t_done == b.t_done
+
+
+def test_autoscaler_handles_long_idle_gaps():
+    """A sparse trace with a multi-hour lull: the control loop skips the
+    drained gap (no tick storm) and the demand wake still serves the late
+    arrival."""
+    qs = [Query(32, 32, 0.0), Query(32, 32, 5.0e4)]
+    r = simulate_fleet(CFG, qs, {"perf": PoolSpec(PERF, 2, 1, linger_s=10.0)},
+                       SingleSystemScheduler(CFG, PERF),
+                       autoscaler=QueueDepthAutoscaler(period_s=10.0,
+                                                       min_instances=0))
+    assert len(r.records) == 2
+    assert r.per_pool["perf"].wake_count >= 1
+    assert r.per_pool["perf"].sleep_s > 4.0e4
+
+
+def test_autoscaler_unknown_pool_rejected():
+    with pytest.raises(KeyError):
+        FleetSimulator(CFG, {"perf": PoolSpec(PERF, 1, 1)},
+                       SingleSystemScheduler(CFG, PERF),
+                       autoscaler={"nope": QueueDepthAutoscaler()})
+
+
+# --------------------------------------------------- snapshot / dispatch plumbing
+def test_snapshot_reports_awake_counts_and_wake_delay():
+    sim = FleetSimulator(CFG, {"perf": PoolSpec(PERF, 2, 1, linger_s=5.0)},
+                         SingleSystemScheduler(CFG, PERF))
+    pool = sim.pools["perf"]
+    snap = pool.snapshot(sim.model, 0.0)
+    assert snap.awake_instances == 2 and snap.asleep_instances == 0
+    assert snap.wake_delay_s == 0.0
+    # put one instance to sleep: still a free awake slot -> no wake delay
+    pool.instances[0].go_sleep(0.0, SLEEP)
+    snap = pool.snapshot(sim.model, 0.0)
+    assert snap.awake_instances == 1 and snap.asleep_instances == 1
+    assert snap.wake_delay_s == 0.0
+    # both asleep: the only path to capacity is a demand wake
+    pool.instances[1].go_sleep(0.0, SLEEP)
+    snap = pool.snapshot(sim.model, 0.0)
+    assert snap.awake_instances == 0 and snap.asleep_instances == 2
+    assert snap.wake_delay_s == PERF.states().sleep.wake_s
+    assert snap.est_wait_s >= snap.wake_delay_s
+    assert snap.provisioned_instances == 0 and snap.awake_slots == 0
+    # waking: the remaining wake time, not the full latency
+    pool.instances[0].begin_wake(0.0)
+    snap = pool.snapshot(sim.model, 2.0)
+    assert snap.wake_delay_s == pytest.approx(
+        PERF.states().sleep.wake_s - 2.0)
+
+
+def test_dispatch_prices_cold_pool_honestly():
+    """Twin pools, one fully asleep: est_wait carries the wake delay, so the
+    capacity-aware policy routes to the warm pool under a latency objective."""
+    from dataclasses import replace
+    warm = replace(PERF, name="twin-warm")
+    cold = replace(PERF, name="twin-cold")
+    cp = normalized_cost_params(CFG, warm, lam=0.0)    # pure latency
+    sched = CapacityAwareScheduler(CFG, [warm, cold],
+                                   {warm.name: 1, cold.name: 1}, cp)
+    wake_s = PERF.states().sleep.wake_s
+    fleet = FleetState(pools={
+        "warm": PoolSnapshot(system=warm, awake_instances=1,
+                             asleep_instances=0, est_wait_s=0.0),
+        "cold": PoolSnapshot(system=cold, awake_instances=0,
+                             asleep_instances=1, est_wait_s=wake_s,
+                             wake_delay_s=wake_s)})
+    assert sched.dispatch(Query(16, 16), fleet).name == warm.name
+
+
+def test_router_mirrors_awake_count_view():
+    from repro.serving.router import FleetRouter
+    router = FleetRouter(CFG, {"eff": EFF, "perf": PERF}, {},
+                         policy="capacity_aware",
+                         counts={EFF.name: 3, PERF.name: 2})
+    router.batchers = {}            # no execution backend: route()-only flow
+    state = router._fleet_state(0.0)
+    for name, n in (("eff", 3), ("perf", 2)):
+        snap = state.pools[name]
+        assert snap.awake_instances == n
+        assert snap.asleep_instances == 0
+        assert snap.wake_delay_s == 0.0
+
+
+def test_demand_wake_on_block_bound_stall():
+    """A free slot on a block-saturated awake instance is not capacity: the
+    stalled head must demand-wake a sleeping instance instead of waiting
+    out the resident's (long) decode."""
+    # q1 pins all 36 blocks of instance A for minutes (m1-pro decode);
+    # q2 arrives after instance B has lingered to sleep
+    qs = [Query(64, 512, 0.0), Query(8, 8, 20.0)]
+    spec = PoolSpec(EFF, 2, 2, kv_blocks=36, block_size=16, linger_s=10.0)
+    r = simulate_fleet(CFG, qs, {"eff": spec}, SingleSystemScheduler(CFG, EFF))
+    first = min(r.records, key=lambda x: x.t_arrival)
+    second = max(r.records, key=lambda x: x.t_arrival)
+    assert r.per_pool["eff"].wake_count == 1
+    assert second.wait_s == pytest.approx(EFF.states().sleep.wake_s, rel=1e-9)
+    assert second.t_start < first.t_done       # far before the decode frees
+
+
+def test_snapshot_free_blocks_counts_wakeable_capacity():
+    """Sleeping instances' free blocks ARE admissible capacity — a demand
+    wake reaches them within wake_delay_s, which est_wait_s already prices.
+    Reporting a cold pool as block-starved would stack mem_wait_s (~a full
+    service time) on top of the wake latency: a double penalty."""
+    sim = FleetSimulator(CFG, {"perf": PoolSpec(PERF, 2, 2, kv_blocks=16,
+                                                block_size=16, linger_s=5.0)},
+                         SingleSystemScheduler(CFG, PERF))
+    pool = sim.pools["perf"]
+    pool.instances[1].go_sleep(0.0, SLEEP)
+    pool.instances[0].blocks_in_use = 16       # awake instance saturated
+    snap = pool.snapshot(sim.model, 0.0)
+    assert snap.free_blocks == 16              # the sleeping instance's pool
+    # a (64, 64) request needs 8 <= 16 blocks: no scarcity surcharge on top
+    # of the wake path
+    assert snap.mem_wait_s(64, 64, 100.0) == 0.0
+
+
+# ------------------------------------------------------ satellite: refill fix
+def test_refill_uses_capacity_freed_in_same_tick():
+    """Two instances, tight kv_blocks: the head-of-line request fits only
+    after a completion due at exactly `now` on an instance whose event is
+    still in the heap — _refill must settle it and admit in the same tick
+    instead of leaving the head queued."""
+    spec = PoolSpec(PERF, 2, 2, kv_blocks=8, block_size=16)
+    sim = FleetSimulator(CFG, {"perf": spec}, SingleSystemScheduler(CFG, PERF))
+    pool = sim.pools["perf"]
+    a, b = pool.instances
+    now = 50.0
+    # instance A: free slot but zero free blocks (long-running resident)
+    ra = _Resident(sim.model, _rec(0, Query(64, 64), 0.0), PERF, 0.0, blocks=8)
+    ra.rem_tokens = 40.0
+    a.residents.append(ra)
+    a.blocks_in_use = 8
+    a.last_t = now
+    # instance B: resident holding all 8 blocks, finished by `now` but its
+    # completion event not yet processed (B not advanced since admission)
+    rb = _Resident(sim.model, _rec(1, Query(64, 64), 0.0), PERF, 0.0, blocks=8)
+    rb.rem_tokens = 0.0
+    b.residents.append(rb)
+    b.blocks_in_use = 8
+    b.last_t = now - 1.0
+    # head request needs 8 blocks: no instance fits until B completes
+    head = _rec(2, Query(64, 64), now)
+    pool.enqueue(now, 0, head, 1.0)
+    sim._horizon = 0.0
+    events, seq = [], iter(range(100))
+    sim._refill(pool, now, events, seq)
+    assert not pool.queue, "head skipped capacity freed in the same tick"
+    assert head.t_start == now
+    assert rb.rec.t_done == now          # the due completion was settled
+    assert head in [r.rec for r in b.residents]
+
+
+def _rec(rid, q, t):
+    from repro.core.fleet import RequestRecord
+    return RequestRecord(rid, q, "perf", t_arrival=t)
+
+
+def test_refill_regression_end_to_end_tight_blocks():
+    """Same-arrival bursts on two block-tight instances drain without loss
+    and respect the per-instance block bound."""
+    qs = [Query(64, 64, float(i // 4)) for i in range(24)]
+    spec = PoolSpec(PERF, 2, 4, kv_blocks=16, block_size=16)
+    r = simulate_fleet(CFG, qs, {"perf": spec}, SingleSystemScheduler(CFG, PERF))
+    assert len(r.records) == 24
+    # each request holds ceil(128/16)=8 blocks -> 2 per instance, 4 total
+    assert r.per_pool["perf"].peak_residents <= 4
+    assert all(rec.t_done > rec.t_start for rec in r.records)
+
+
+# --------------------------------------- satellite: idle-inclusive J/token
+def test_j_per_token_and_fleet_j_per_token_pinned():
+    qs = sample_workload(40, seed=11, spec=WorkloadSpec(rate_qps=2.0))
+    r = simulate_fleet(CFG, qs, {"perf": PoolSpec(PERF, 2, 2)},
+                       SingleSystemScheduler(CFG, PERF))
+    tokens = sum(q.m + q.n for q in qs)
+    attributed = sum(rec.energy_j for rec in r.records)
+    idle = sum(p.idle_energy_j for p in r.per_pool.values())
+    assert idle > 0
+    # the old field: request-attributed only (kept, still excludes idle)
+    assert r.j_per_token == pytest.approx(attributed / tokens, rel=1e-12)
+    # the headline field: idle-inclusive
+    assert r.fleet_j_per_token == pytest.approx((attributed + idle) / tokens,
+                                                rel=1e-12)
+    assert r.fleet_j_per_token > r.j_per_token
+
+
+def test_fleet_j_per_token_reranks_underutilized_fleet():
+    """A hugely overprovisioned fleet looks identical on j_per_token but
+    strictly worse on fleet_j_per_token — the understated-idle bug."""
+    qs = sample_workload(30, seed=1, spec=WorkloadSpec(rate_qps=0.5))
+    lean = simulate_fleet(CFG, qs, {"perf": PoolSpec(PERF, 2, 2)},
+                          SingleSystemScheduler(CFG, PERF))
+    fat = simulate_fleet(CFG, qs, {"perf": PoolSpec(PERF, 30, 2)},
+                         SingleSystemScheduler(CFG, PERF))
+    assert fat.j_per_token == pytest.approx(lean.j_per_token, rel=0.2)
+    assert fat.fleet_j_per_token > lean.fleet_j_per_token * 2
+
+
+# ----------------------------------------------- satellite: flat summary()
+def test_summary_is_flat_scalar_dict():
+    qs = sample_workload(20, seed=4, spec=WorkloadSpec(rate_qps=2.0))
+    r = simulate_fleet(CFG, qs,
+                       {"eff": PoolSpec(EFF, 2, 1), "perf": PoolSpec(PERF, 2, 1)},
+                       ThresholdScheduler(CFG, EFF, PERF, t_in=32))
+    s = r.summary()
+    assert all(isinstance(v, float) for v in s.values()), \
+        f"summary must be flat Dict[str, float], got {s}"
+    assert "util_eff" in s and "util_perf" in s
+    assert "utilization" not in s
+    assert s["util_eff"] == r.per_pool["eff"].utilization
+    assert s["fleet_j_per_token"] == r.fleet_j_per_token
+    # a flat CSV writer round-trips it
+    header = ",".join(s)
+    row = ",".join(str(v) for v in s.values())
+    assert len(header.split(",")) == len(row.split(","))
+
+
+# ------------------------------- satellite: float-dust consistency at large now
+def test_snap_and_pop_thresholds_consistent_at_large_now():
+    """advance()'s 4*spacing(now) snap and pop_finished's rem<=1e-6 must not
+    leave a gap in the supported horizon range: any resident the snap leaves
+    unsnapped schedules an event strictly after `now` (no livelock), and any
+    snapped remainder is below the pop threshold (no lost tokens)."""
+    model_t_tok = []
+    from repro.core.pricing import CostModel
+    m = CostModel(CFG)
+    for sys in (EFF, PERF):
+        for mm, nn in ((8, 8), (64, 64), (512, 512)):
+            ph = m.phases(mm, nn, sys)
+            model_t_tok.append(ph.t_decode / nn)
+    t_tok_min = min(model_t_tok)
+    for now in (1e5, 3e5, 1e6):
+        # unsnapped => rem*t_tok > 4*spacing(now) => the next event time
+        # now + rem*t_tok lands strictly after now (progress is guaranteed)
+        assert 4.0 * np.spacing(now) > np.spacing(now)
+        assert float(now + 4.0 * np.spacing(now)) > now
+        # the pop threshold covers everything the snap can zero: a snapped
+        # remainder is at most 4*spacing(now)/t_tok tokens, far below 1e-6
+        assert 4.0 * np.spacing(now) / t_tok_min < 1e-6, \
+            f"snap can kill >1e-6 tokens at now={now:g} (t_tok={t_tok_min:g})"
+
+
+def test_no_livelock_and_no_drift_at_diurnal_horizon():
+    """The same workload simulated near t=0 and shifted to t>=1e5 s (a
+    diurnal horizon) must complete (no livelock) with identical per-request
+    token accounting and energies up to float dust."""
+    offset = 3.0e5
+    base = sample_workload(60, seed=13, spec=WorkloadSpec(rate_qps=2.0),
+                           arrival_process="mmpp")
+    shifted = [Query(q.m, q.n, q.arrival_s + offset) for q in base]
+    pools = lambda: {"eff": PoolSpec(EFF, 2, 2), "perf": PoolSpec(PERF, 1, 4)}
+    r0 = simulate_fleet(CFG, base, pools(),
+                        ThresholdScheduler(CFG, EFF, PERF, t_in=32))
+    r1 = simulate_fleet(CFG, shifted, pools(),
+                        ThresholdScheduler(CFG, EFF, PERF, t_in=32))
+    assert len(r1.records) == len(base)              # completed: no livelock
+    assert r1.horizon_s >= offset
+    for a, b in zip(r0.records, r1.records):
+        assert a.query.m == b.query.m and a.query.n == b.query.n
+        assert b.energy_j == pytest.approx(a.energy_j, rel=1e-6)
+        assert (b.t_done - offset) == pytest.approx(a.t_done, abs=1e-4)
+
+
+def test_power_machine_stable_at_large_now():
+    """Sleep/wake timestamps at now>=1e5 s: linger deadlines and wake
+    completions must still fire and the fleet must drain."""
+    offset = 2.0e5
+    qs = [Query(32, 32, offset), Query(32, 32, offset + 300.0)]
+    r = simulate_fleet(CFG, qs, {"perf": PoolSpec(PERF, 1, 1, linger_s=10.0)},
+                       SingleSystemScheduler(CFG, PERF))
+    assert len(r.records) == 2
+    assert r.per_pool["perf"].wake_count >= 1
+    assert r.per_pool["perf"].sleep_s > 100.0
