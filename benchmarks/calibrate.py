@@ -46,7 +46,7 @@ MEASURED_REL_RMSE_BOUND = 0.35
 HOST_CPU = SystemProfile(
     name="host-cpu", kind="eff", chips=1,
     peak_flops=2.0e11, hbm_bw=5.0e10, ici_bw=0.0,
-    power_peak=65.0, power_idle=10.0, overhead_s=1e-3,
+    power_peak_w=65.0, power_idle_w=10.0, overhead_s=1e-3,
 )
 
 

@@ -128,14 +128,14 @@ def headline_table() -> List[List]:
                          f"{hd.hybrid.total_energy_j:.0f}",
                          f"{hd.savings_vs_best_baseline:.4f}",
                          f"{hd.savings_vs_all_perf:.4f}",
-                         f"{hd.runtime_penalty_vs_all_perf:.4f}"])
+                         f"{hd.runtime_penalty_frac_vs_all_perf:.4f}"])
             hd2 = headline(cfg, qs, eff, perf, t_in=32, axis="both",
                            paper_faithful=False)
             rows.append([fleet_name, model, "threshold_both32_joint",
                          f"{hd2.hybrid.total_energy_j:.0f}",
                          f"{hd2.savings_vs_best_baseline:.4f}",
                          f"{hd2.savings_vs_all_perf:.4f}",
-                         f"{hd2.runtime_penalty_vs_all_perf:.4f}"])
+                         f"{hd2.runtime_penalty_frac_vs_all_perf:.4f}"])
             co = simulate(cfg, qs, CostOptimalScheduler(cfg, [eff, perf]))
             ap = simulate(cfg, qs, SingleSystemScheduler(cfg, perf))
             rows.append([fleet_name, model, "cost_optimal_joint",

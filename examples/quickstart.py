@@ -44,7 +44,7 @@ def main():
     print(f"\noptimal input threshold T* = {best.threshold} (paper: 32)")
     print(f"hybrid energy savings vs best workload-unaware baseline: "
           f"{hd.savings_vs_best_baseline:.1%} (paper: 7.5%)")
-    print(f"runtime penalty vs all-A100: {hd.runtime_penalty_vs_all_perf:.0%} "
+    print(f"runtime penalty vs all-A100: {hd.runtime_penalty_frac_vs_all_perf:.0%} "
           "(the paper's energy/runtime trade-off)")
 
     # ---- 3. route + execute real tokens --------------------------------------

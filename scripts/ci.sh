@@ -13,6 +13,12 @@ python -m pytest -q --collect-only >/dev/null
 
 python -m pytest -x -q
 
+# Static-analysis gate (repro.analysis): dimensional analysis over the
+# unit-suffix convention, JAX hot-path host-sync/trace hazards, and
+# scheduler purity. The committed baseline is EMPTY — new findings must be
+# fixed or carry an inline `# repro-lint: allow[rule]` justification.
+python -m repro.analysis --fail-on warning src benchmarks
+
 # Oracle regression gates (fast, fixed seeds): the calibration fit must
 # recover ground-truth roofline constants within its documented bound, and
 # the fleet sweep's quantized-memo pricing must preserve the zero-load

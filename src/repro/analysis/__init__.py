@@ -1,0 +1,21 @@
+"""repro.analysis — static analysis for the repro codebase.
+
+Three checkers over a shared AST framework (see ``framework``):
+
+* ``units``           dimensional analysis from the unit-suffix convention
+* ``jax-hot-path``    host-sync / trace hazards on JAX hot paths
+* ``scheduler-purity`` no self-mutation in Scheduler.choose/dispatch
+
+Run with ``python -m repro.analysis`` or the ``repro-lint`` entry point.
+"""
+from repro.analysis.findings import ERROR, WARNING, Finding, RawFinding
+from repro.analysis.framework import (analyze_paths, analyze_source,
+                                      default_checkers)
+
+__all__ = ["ERROR", "WARNING", "Finding", "RawFinding", "analyze_paths",
+           "analyze_source", "default_checkers", "main"]
+
+
+def main(argv=None):
+    from repro.analysis.cli import main as _main
+    return _main(argv)

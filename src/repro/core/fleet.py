@@ -408,9 +408,9 @@ class _Instance:
                     # blended power over the window: overhead draws idle
                     # power, prefill draws power at util_prefill — integrates
                     # to exactly the static per-query prefill+overhead energy
-                    p = (ph.t_overhead * s.power(0.0) + ph.t_prefill
-                         * s.power(ph.util_prefill)) / max(t_total, 1e-12)
-                    r.rec.energy_j += span * p
+                    p_w = (ph.t_overhead * s.power(0.0) + ph.t_prefill
+                           * s.power(ph.util_prefill)) / max(t_total, 1e-12)
+                    r.rec.energy_j += span * p_w
 
     def pop_finished(self, now: float) -> List[_Resident]:
         """Remove and return residents that have emitted all output tokens
@@ -862,7 +862,7 @@ class FleetSimulator:
         accounting window and contribute nothing."""
         s = p.spec.system
         p_idle = s.power(0.0)
-        idle = sleep_s = wake_j = 0.0
+        idle_j = sleep_s = wake_j = 0.0
         wakes = 0
         for i in p.instances:
             segs = i.timeline + [(horizon, "end")]
@@ -871,15 +871,15 @@ class FleetSimulator:
                 if dur <= 0:
                     continue
                 if st in (AWAKE, WAKING):
-                    idle += dur * p_idle
+                    idle_j += dur * p_idle
                 else:
-                    idle += dur * s.state_power(st)
+                    idle_j += dur * s.state_power(st)
                     sleep_s += dur
-            idle -= i.busy_slot_seconds * p_idle / p.spec.slots
-            idle += i.wake_energy_j
+            idle_j -= i.busy_slot_seconds * p_idle / p.spec.slots
+            idle_j += i.wake_energy_j
             wake_j += i.wake_energy_j
             wakes += i.n_wakes
-        p.result.idle_energy_j = idle
+        p.result.idle_energy_j = idle_j
         p.result.sleep_s = sleep_s
         p.result.wake_energy_j = wake_j
         p.result.wake_count = wakes

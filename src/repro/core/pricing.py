@@ -449,10 +449,10 @@ class CostModel:
     def energy(self, m: int, n: int, s: SystemProfile, batch: int = 1) -> float:
         """E(m, n, s) in joules (Eq. 1's energy term)."""
         ph = self.phases(m, n, s, batch)
-        e = ph.t_prefill * s.power(ph.util_prefill)
-        e += ph.t_decode * s.power(ph.util_decode)
-        e += ph.t_overhead * s.power(0.0)
-        return e
+        e_j = ph.t_prefill * s.power(ph.util_prefill)
+        e_j += ph.t_decode * s.power(ph.util_decode)
+        e_j += ph.t_overhead * s.power(0.0)
+        return e_j
 
     def cost(self, m: int, n: int, s: SystemProfile, *, batch: int = 1,
              wait_s: float = 0.0, t_exec: Optional[float] = None) -> float:

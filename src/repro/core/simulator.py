@@ -107,7 +107,15 @@ class HeadlineResult:
     best_baseline: str
     savings_vs_best_baseline: float        # fraction, e.g. 0.075
     savings_vs_all_perf: float
-    runtime_penalty_vs_all_perf: float
+    runtime_penalty_frac_vs_all_perf: float    # dimensionless, e.g. 0.05
+
+    @property
+    def runtime_penalty_vs_all_perf(self) -> float:
+        import warnings
+        warnings.warn("HeadlineResult.runtime_penalty_vs_all_perf is "
+                      "deprecated; use runtime_penalty_frac_vs_all_perf",
+                      DeprecationWarning, stacklevel=2)
+        return self.runtime_penalty_frac_vs_all_perf
 
 
 def headline(cfg: ModelConfig, queries: Sequence[Query], eff: SystemProfile,
@@ -145,5 +153,5 @@ def headline(cfg: ModelConfig, queries: Sequence[Query], eff: SystemProfile,
         hybrid=hybrid, baselines=baselines, best_baseline=best,
         savings_vs_best_baseline=(eb - hybrid.total_energy_j) / eb,
         savings_vs_all_perf=(ep - hybrid.total_energy_j) / ep,
-        runtime_penalty_vs_all_perf=(hybrid.total_runtime_s - rp) / rp,
+        runtime_penalty_frac_vs_all_perf=(hybrid.total_runtime_s - rp) / rp,
     )

@@ -23,6 +23,7 @@ peak/idle constants.
 from __future__ import annotations
 
 import functools
+import warnings
 from dataclasses import dataclass, replace
 from typing import Dict, Optional, Tuple
 
@@ -34,7 +35,7 @@ class PowerState:
     """One row of a profile's power-state table.
 
     ``power_w`` is per chip (multiply by ``SystemProfile.chips`` for the
-    instance draw, as with ``power_peak``/``power_idle``). ``wake_s`` /
+    instance draw, as with ``power_peak_w``/``power_idle_w``). ``wake_s`` /
     ``wake_j`` are the latency and one-shot energy (per *instance*) of the
     transition from this state back to ``idle``; during that window the
     instance additionally draws idle power (it is powering up), so
@@ -50,7 +51,7 @@ class PowerStateTable:
     """Per-profile ``active``/``idle``/``sleep``/``off`` table.
 
     ``active``/``idle`` draws must agree with the profile's
-    ``power_peak``/``power_idle`` (the utilization-linear ``power()`` model
+    ``power_peak_w``/``power_idle_w`` (the utilization-linear ``power()`` model
     interpolates between them); ``sleep``/``off`` are the states the fleet
     power machine can descend a drained instance into."""
     active: PowerState
@@ -73,8 +74,8 @@ class SystemProfile:
     peak_flops: float         # FLOP/s per chip (bf16/fp16 dense)
     hbm_bw: float             # bytes/s per chip
     ici_bw: float             # bytes/s per inter-chip link
-    power_peak: float         # W per chip, full utilization
-    power_idle: float         # W per chip, idle but allocated
+    power_peak_w: float       # W per chip, full utilization
+    power_idle_w: float       # W per chip, idle but allocated
     overhead_s: float         # per-query software overhead (tokenize/schedule/launch)
     mem_eff: float = 0.8      # achievable fraction of peak HBM bandwidth
     compute_eff: float = 0.5  # achievable fraction of peak FLOPs at B=1 inference
@@ -92,6 +93,20 @@ class SystemProfile:
     # pre-power-management profile (and its hash/equality) is unchanged.
     power_states: Optional[PowerStateTable] = None
 
+    # Deprecated unit-less aliases (one release): the fields were renamed to
+    # carry their unit like every other quantity in the repo.
+    @property
+    def power_peak(self) -> float:
+        warnings.warn("SystemProfile.power_peak is deprecated; use "
+                      "power_peak_w", DeprecationWarning, stacklevel=2)
+        return self.power_peak_w
+
+    @property
+    def power_idle(self) -> float:
+        warnings.warn("SystemProfile.power_idle is deprecated; use "
+                      "power_idle_w", DeprecationWarning, stacklevel=2)
+        return self.power_idle_w
+
     def degradation(self, ctx: float) -> float:
         if self.sat_ctx is None:
             return 1.0
@@ -108,7 +123,8 @@ class SystemProfile:
     def power(self, util: float) -> float:
         """Instance power draw (W) at compute utilization in [0, 1]."""
         util = min(max(util, 0.0), 1.0)
-        return self.chips * (self.power_idle + (self.power_peak - self.power_idle) * util)
+        return self.chips * (self.power_idle_w
+                              + (self.power_peak_w - self.power_idle_w) * util)
 
     def states(self) -> PowerStateTable:
         """This profile's power-state table (explicit or derived)."""
@@ -137,7 +153,7 @@ def default_power_states(profile: SystemProfile, *,
     as half the idle-to-peak gap sustained over the wake latency — the fleet
     machine separately charges idle draw for the wake window, so the table
     stays consistent whichever latency is configured."""
-    idle_w, peak_w = profile.power_idle, profile.power_peak
+    idle_w, peak_w = profile.power_idle_w, profile.power_peak_w
     surge_w = 0.5 * (peak_w - idle_w) * profile.chips     # per instance
     return PowerStateTable(
         active=PowerState("active", peak_w),
@@ -154,8 +170,8 @@ def default_power_states(profile: SystemProfile, *,
 TPU_V5E_PERF = SystemProfile(
     name="tpu-v5e-perf", kind="perf", chips=4,
     peak_flops=197e12, hbm_bw=819e9, ici_bw=50e9,
-    power_peak=170.0,         # ~ per-chip board power under load
-    power_idle=55.0,          # ~ allocated-idle
+    power_peak_w=170.0,         # ~ per-chip board power under load
+    power_idle_w=55.0,          # ~ allocated-idle
     overhead_s=0.04,
 )
 
@@ -164,7 +180,7 @@ TPU_V5E_PERF = SystemProfile(
 TPU_V5LITE_EFF = SystemProfile(
     name="tpu-v5lite-eff", kind="eff", chips=1,
     peak_flops=98.5e12, hbm_bw=819e9, ici_bw=50e9,
-    power_peak=70.0, power_idle=8.0,
+    power_peak_w=70.0, power_idle_w=8.0,
     overhead_s=0.08,          # weaker host, slower launch path
     sat_ctx=2048.0,           # single chip: VMEM/HBM pressure at long context
     max_out_tokens=4096,
@@ -176,7 +192,7 @@ M1_PRO = SystemProfile(
     peak_flops=5.2e12,        # 14-core M1 Pro GPU fp16
     hbm_bw=200e9,             # unified memory bandwidth
     ici_bw=0.0,
-    power_peak=30.0, power_idle=2.0,
+    power_peak_w=30.0, power_idle_w=2.0,
     overhead_s=0.35,          # macOS + python serving stack (paper Fig 1a intercept)
     compute_eff=0.4,
     sat_ctx=10.0,             # calibrated: reproduces the paper's T*=32 optimum
@@ -187,14 +203,14 @@ M1_PRO = SystemProfile(
 A100_NODE = SystemProfile(
     name="swing-a100", kind="perf", chips=8,   # 8x A100-40GB (paper's Swing node)
     peak_flops=312e12, hbm_bw=1555e9, ici_bw=300e9,
-    power_peak=400.0, power_idle=55.0,
+    power_peak_w=400.0, power_idle_w=55.0,
     overhead_s=0.06,
 )
 
 V100_NODE = SystemProfile(
     name="palmetto-v100", kind="perf", chips=2,  # 2x V100-16GB
     peak_flops=125e12, hbm_bw=900e9, ici_bw=150e9,
-    power_peak=300.0, power_idle=45.0,
+    power_peak_w=300.0, power_idle_w=45.0,
     overhead_s=0.10,
 )
 

@@ -97,6 +97,8 @@ class ContinuousBatcher(_BatcherBase):
         self.cache = _clear_lane(self.cache, i)
 
     def _fill_slots(self) -> None:
+        admitted: List[int] = []
+        tok_devs: List[jnp.ndarray] = []
         for i in range(self.slots):
             if self.active[i] is None and self.queue:
                 req = self.queue.pop(0)
@@ -106,12 +108,22 @@ class ContinuousBatcher(_BatcherBase):
                 lane_cache = self.engine.new_cache(1)
                 batch = {"tokens": jnp.asarray(req.tokens, jnp.int32)[None]}
                 logits, lane_cache = self.engine.prefill(batch, lane_cache)
-                tok = int(jnp.argmax(logits, axis=-1)[0])
-                req.out_tokens.append(tok)
-                self._last_tok = self._last_tok.at[i].set(tok)
+                tok_devs.append(jnp.argmax(logits, axis=-1)[0]
+                                .astype(jnp.int32))
+                admitted.append(i)
                 self.cache = _splice_lane(self.cache, lane_cache, i)
-                if self._finished(req):       # eos on the very first token
-                    self._retire(i)
+        if not admitted:
+            return
+        # seed next tick's decode input on device, then ONE batched host
+        # sync for all admissions this tick (was one blocking int() each)
+        tok_dev = jnp.stack(tok_devs)
+        self._last_tok = self._last_tok.at[jnp.asarray(admitted)].set(tok_dev)
+        toks = np.asarray(tok_dev)  # repro-lint: allow[jax-host-sync]
+        for i, tok in zip(admitted, toks):
+            req = self.active[i]
+            req.out_tokens.append(int(tok))
+            if self._finished(req):       # eos on the very first token
+                self._retire(i)
 
     def step(self) -> None:
         """One scheduler tick: refill empty lanes, one batched decode step."""
@@ -125,7 +137,7 @@ class ContinuousBatcher(_BatcherBase):
         # sync per tick for the bookkeeping below
         tok_dev = jnp.argmax(logits, axis=-1).astype(jnp.int32)
         self._last_tok = tok_dev
-        toks = np.asarray(tok_dev)
+        toks = np.asarray(tok_dev)  # repro-lint: allow[jax-host-sync]
         for i in live:
             req = self.active[i]
             req.out_tokens.append(int(toks[i]))
@@ -358,7 +370,8 @@ class PagedContinuousBatcher(_BatcherBase):
     def _prefill_tick(self) -> None:
         """Advance every still-prefilling lane by one chunk. The final chunk
         yields the first output token, exactly like a dense prefill."""
-        first_toks: List[Tuple[int, int]] = []
+        done_lanes: List[int] = []
+        tok_devs: List[jnp.ndarray] = []
         for i in range(self.slots):
             req, lane = self.active[i], self._lane[i]
             if req is None or lane.prefilled >= len(req.tokens):
@@ -378,16 +391,24 @@ class PagedContinuousBatcher(_BatcherBase):
                                          lane.registered, full)
                     lane.registered = full
             if lane.prefilled >= m:
-                tok = int(jnp.argmax(logits, axis=-1)[0])
-                req.out_tokens.append(tok)
-                first_toks.append((i, tok))
-                if self._finished(req):           # eos on the very first token
-                    self._retire(i)
-        if first_toks:
-            last = np.asarray(self._last_tok, np.int32).copy()
-            for i, tok in first_toks:
-                last[i] = tok
-            self._last_tok = jnp.asarray(last)    # one vectorized update
+                done_lanes.append(i)
+                tok_devs.append(jnp.argmax(logits, axis=-1)[0]
+                                .astype(jnp.int32))
+        if not done_lanes:
+            return
+        # seed the decode input with a device-side scatter (the previous
+        # device->host->device round trip stalled the tick), then ONE
+        # batched host sync for all completions (was one blocking int()
+        # per completing lane)
+        tok_dev = jnp.stack(tok_devs)
+        self._last_tok = self._last_tok.at[jnp.asarray(done_lanes)].set(
+            tok_dev)
+        toks = np.asarray(tok_dev)  # repro-lint: allow[jax-host-sync]
+        for i, tok in zip(done_lanes, toks):
+            req = self.active[i]
+            req.out_tokens.append(int(tok))
+            if self._finished(req):               # eos on the very first token
+                self._retire(i)
 
     # -------------------------------------------------------------- decode
     def _decode_lanes(self) -> List[int]:
@@ -412,7 +433,7 @@ class PagedContinuousBatcher(_BatcherBase):
         # them before any read. One host sync per tick.
         tok_dev = jnp.argmax(logits, axis=-1).astype(jnp.int32)
         self._last_tok = tok_dev
-        toks = np.asarray(tok_dev)
+        toks = np.asarray(tok_dev)  # repro-lint: allow[jax-host-sync]
         for i in live:
             req = self.active[i]
             req.out_tokens.append(int(toks[i]))

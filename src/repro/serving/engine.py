@@ -100,7 +100,10 @@ class InferenceEngine:
             logits, cache = self.decode(tok[:, None], cache)
             tok = self._select(logits, temperature, key, i + 1)
             out.append(tok)
-            if eos_id is not None and bool(jnp.all(tok == eos_id)):
+            # deliberate per-token sync: early EOS exit saves whole decode
+            # steps, which dwarfs the transfer cost at batch scale
+            if eos_id is not None and bool(  # repro-lint: allow[jax-host-sync]
+                    jnp.all(tok == eos_id)):
                 break
         toks = np.stack([np.asarray(t) for t in out], axis=1)
         return GenerationResult(tokens=toks, prompt_len=S, steps=toks.shape[1])

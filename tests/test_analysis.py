@@ -1,0 +1,449 @@
+"""Tests for repro.analysis: the lint corpus (true/false positives per rule),
+baseline round-trip, suppression handling, and regression pins for the
+defects the analyzer surfaced in the serving/core code."""
+import json
+import textwrap
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.analysis import analyze_paths, analyze_source
+from repro.analysis.baseline import (filter_findings, load_baseline,
+                                     save_baseline)
+from repro.analysis.findings import Finding, WARNING
+from repro.configs import get_config
+from repro.core.simulator import HeadlineResult
+from repro.core.systems import TPU_V5E_PERF
+from repro.models import model as M
+from repro.serving.batching import (ContinuousBatcher,
+                                    PagedContinuousBatcher, Request)
+from repro.serving.engine import InferenceEngine
+
+KEY = jax.random.PRNGKey(11)
+
+
+def lint(snippet):
+    return analyze_source(textwrap.dedent(snippet), path="snippet.py")
+
+
+def rules_of(findings):
+    return {f.rule for f in findings}
+
+
+# =========================================================== units: positives
+def test_units_flags_energy_plus_power():
+    fs = lint("""
+        def total(e_j, p_w):
+            return e_j + p_w
+    """)
+    assert "unit-add" in rules_of(fs)
+
+
+def test_units_flags_power_times_time_bound_to_power_name():
+    fs = lint("""
+        def draw(p_w, dt_s):
+            total_w = p_w * dt_s
+            return total_w
+    """)
+    assert "unit-assign" in rules_of(fs)
+
+
+def test_units_flags_seconds_returned_from_energy_function():
+    fs = lint("""
+        def overhead_j(t_s, p_w):
+            return t_s
+    """)
+    assert "unit-return" in rules_of(fs)
+
+
+def test_units_flags_per_token_division_without_suffix():
+    fs = lint("""
+        def report(e_j, tokens):
+            jpt = e_j / tokens
+            return jpt
+    """)
+    assert "unit-derived-name" in rules_of(fs)
+
+
+def test_units_flags_suffixless_quantity_field():
+    fs = lint("""
+        from dataclasses import dataclass
+
+        @dataclass
+        class Result:
+            energy: float
+            runtime: float
+    """)
+    assert "unit-field" in rules_of(fs)
+    assert sum(f.rule == "unit-field" for f in fs) == 2
+
+
+# =========================================================== units: negatives
+def test_units_accepts_consistent_energy_accounting():
+    fs = lint("""
+        def account(t_prefill_s, t_decode_s, p_peak_w, p_idle_w):
+            e_j = t_prefill_s * p_peak_w
+            e_j += t_decode_s * p_idle_w
+            return e_j
+    """)
+    assert fs == []
+
+
+def test_units_accepts_normalized_objective():
+    # the paper's Eq. 1: adding *normalized* energy and runtime is fine
+    fs = lint("""
+        def cost(e_j, r_s, e_norm, r_norm, lam):
+            return lam * e_j / e_norm + (1.0 - lam) * r_s / r_norm
+    """)
+    assert fs == []
+
+
+def test_units_accepts_per_token_names_and_counts():
+    fs = lint("""
+        def summarize(e_j, t_s, n_tokens):
+            e_per_token = e_j / n_tokens
+            tok_per_s = n_tokens / t_s
+            return e_per_token, tok_per_s
+    """)
+    assert fs == []
+
+
+def test_units_accepts_suffixed_fields_and_fractions():
+    fs = lint("""
+        from dataclasses import dataclass
+
+        @dataclass
+        class Result:
+            energy_j: float
+            runtime_s: float
+            savings_frac: float
+            n_queries: int
+            name: str
+    """)
+    assert fs == []
+
+
+# ==================================================== jax-hot-path: positives
+def test_jax_flags_item_inside_jit():
+    fs = lint("""
+        import jax
+        import jax.numpy as jnp
+
+        @jax.jit
+        def f(x):
+            return x.item()
+    """)
+    assert "jax-host-sync" in rules_of(fs)
+
+
+def test_jax_flags_float_on_traced_in_batcher_loop():
+    fs = lint("""
+        import jax.numpy as jnp
+
+        class MicroBatcher:
+            def step(self):
+                for i in range(4):
+                    y = jnp.sum(self.cache[i])
+                    self.totals.append(float(y))
+    """)
+    assert "jax-host-sync" in rules_of(fs)
+
+
+def test_jax_flags_python_branch_on_traced_value():
+    fs = lint("""
+        import jax
+        import jax.numpy as jnp
+
+        @jax.jit
+        def f(x):
+            if x > 0:
+                return x
+            return -x
+    """)
+    assert "jax-traced-branch" in rules_of(fs)
+
+
+def test_jax_flags_numpy_fallback_inside_jit():
+    fs = lint("""
+        import jax
+        import numpy as np
+
+        @jax.jit
+        def f(x):
+            return np.asarray(x) * 2
+    """)
+    assert "jax-recompile" in rules_of(fs)
+
+
+# ==================================================== jax-hot-path: negatives
+def test_jax_accepts_branch_on_static_argname():
+    fs = lint("""
+        import functools
+        import jax
+        import jax.numpy as jnp
+
+        @functools.partial(jax.jit, static_argnames=("causal",))
+        def attend(q, causal):
+            if causal:
+                return jnp.tril(q)
+            return q
+    """)
+    assert fs == []
+
+
+def test_jax_accepts_shape_access_and_host_arrays():
+    fs = lint("""
+        import jax
+        import jax.numpy as jnp
+        import numpy as np
+
+        @jax.jit
+        def f(x):
+            b = x.shape[0]
+            return x * b
+
+        def host_side(tokens):
+            buf = np.asarray(tokens)
+            return int(buf[0])
+    """)
+    assert fs == []
+
+
+def test_jax_accepts_device_resident_tick():
+    # the PR-3 contract: keep values on device through the tick
+    fs = lint("""
+        import jax.numpy as jnp
+
+        class MicroBatcher:
+            def step(self):
+                logits, self.cache = self.engine.decode(self.last, self.cache)
+                self.last = jnp.argmax(logits, axis=-1)
+    """)
+    assert fs == []
+
+
+# ================================================= scheduler-purity: positives
+def test_purity_flags_write_in_choose():
+    fs = lint("""
+        class GreedyScheduler:
+            def choose(self, q):
+                self.count += 1
+                return "eff"
+    """)
+    assert "scheduler-purity" in rules_of(fs)
+
+
+def test_purity_flags_mutating_call_in_dispatch():
+    fs = lint("""
+        class QueueScheduler:
+            def dispatch(self, q):
+                self.pending.append(q)
+                return "perf"
+    """)
+    assert "scheduler-purity" in rules_of(fs)
+
+
+def test_purity_flags_mutation_via_helper():
+    fs = lint("""
+        class SneakyScheduler:
+            def choose(self, q):
+                return self._pick(q)
+
+            def _pick(self, q):
+                self.memo[q.m] = "eff"
+                return self.memo[q.m]
+    """)
+    assert "scheduler-purity" in rules_of(fs)
+
+
+# ================================================= scheduler-purity: negatives
+def test_purity_accepts_observe_commit():
+    fs = lint("""
+        class FairScheduler:
+            def choose(self, q):
+                return "eff" if q.m < self.t_in else "perf"
+
+            def observe(self, q, name):
+                self.history.append((q, name))
+    """)
+    assert fs == []
+
+
+def test_purity_accepts_local_state_in_choose():
+    fs = lint("""
+        class RankScheduler:
+            def choose(self, q, snapshots):
+                best = None
+                for name, snap in snapshots.items():
+                    if best is None or snap.free_blocks > best[1]:
+                        best = (name, snap.free_blocks)
+                return best[0]
+    """)
+    assert fs == []
+
+
+def test_purity_ignores_non_scheduler_classes():
+    fs = lint("""
+        class Accumulator:
+            def choose(self, q):
+                self.count += 1
+                return self.count
+    """)
+    assert fs == []
+
+
+# ================================================== suppression and baseline
+def test_inline_suppression_is_honored():
+    noisy = """
+        def total(e_j, p_w):
+            return e_j + p_w
+    """
+    assert rules_of(lint(noisy)) == {"unit-add"}
+    fs = lint("""
+        def total(e_j, p_w):
+            return e_j + p_w  # repro-lint: allow[unit-add]
+    """)
+    assert fs == []
+    # comment-above form, and allow[*]
+    fs = lint("""
+        def total(e_j, p_w):
+            # repro-lint: allow[*]
+            return e_j + p_w
+    """)
+    assert fs == []
+
+
+def test_suppression_of_other_rule_does_not_mask():
+    fs = lint("""
+        def total(e_j, p_w):
+            return e_j + p_w  # repro-lint: allow[jax-host-sync]
+    """)
+    assert "unit-add" in rules_of(fs)
+
+
+def test_baseline_round_trip_and_filtering(tmp_path):
+    f1 = Finding(path="a.py", line=3, col=0, rule="unit-add",
+                 severity=WARNING, message="mixes J and W")
+    f2 = Finding(path="b.py", line=9, col=4, rule="jax-host-sync",
+                 severity=WARNING, message="int() on a traced value")
+    bl = tmp_path / "baseline.json"
+    save_baseline(str(bl), [f1, f2])
+    keys = load_baseline(str(bl))
+    assert set(keys) == {f1.key(), f2.key()}
+
+    # same finding on a different line still matches (location-insensitive)
+    moved = Finding(path="a.py", line=30, col=2, rule="unit-add",
+                    severity=WARNING, message="mixes J and W")
+    fresh = Finding(path="a.py", line=5, col=0, rule="unit-add",
+                    severity=WARNING, message="mixes W and s")
+    res = filter_findings([moved, fresh], keys)
+    assert res.new == [fresh]
+    assert res.matched == [moved]
+    assert [k for k in res.stale] == [f2.key()]
+
+    # the committed baseline is empty and version-tagged
+    committed = json.load(open("src/repro/analysis/baseline.json"))
+    assert committed["findings"] == []
+    assert load_baseline("src/repro/analysis/baseline.json") == []
+
+
+def test_analyzer_clean_over_shipped_sources():
+    """The merge gate: no unsuppressed findings in the serving/core trees
+    (also pins the host-sync defects fixed in this change — reintroducing a
+    per-lane ``int(jnp.argmax(...))`` in batching.py fails here)."""
+    assert analyze_paths(["src/repro/serving", "src/repro/analysis"]) == []
+
+
+# ======================================================= regression: defects
+@pytest.fixture(scope="module")
+def engine():
+    cfg = get_config("smollm-360m").reduced()
+    params = M.init_params(cfg, KEY)
+    return InferenceEngine(cfg, params, max_len=96)
+
+
+class _TransferCounter:
+    """Counts device->host conversions routed through np.asarray and records
+    the element count of each transferred device array."""
+
+    def __init__(self, monkeypatch):
+        self.calls = []
+        orig = np.asarray
+
+        def counting(a, *args, **kwargs):
+            if isinstance(a, jax.Array):
+                self.calls.append(int(a.size))
+            return orig(a, *args, **kwargs)
+
+        monkeypatch.setattr(np, "asarray", counting)
+
+
+def test_paged_prefill_completion_single_batched_sync(engine, monkeypatch):
+    """Two lanes finishing prefill in one tick must cost ONE device->host
+    transfer of exactly the two first tokens — not a per-lane blocking
+    ``int()`` plus a full-width ``_last_tok`` round trip through the host."""
+    b = PagedContinuousBatcher(engine, slots=4, num_blocks=32, block_size=8,
+                               chunk=32, prefix_sharing=False)
+    cfg = engine.cfg
+    prompts = [np.arange(5) % cfg.vocab_size, np.arange(9) % cfg.vocab_size]
+    for i, p in enumerate(prompts):
+        b.submit(Request(i, p, max_new_tokens=4))
+    b._admit()
+    counter = _TransferCounter(monkeypatch)
+    b._prefill_tick()                      # both prompts fit in one chunk
+    assert counter.calls == [2]            # one sync, two tokens
+    assert isinstance(b._last_tok, jax.Array)   # no host round trip
+    for i in range(2):
+        assert len(b.active[i].out_tokens) == 1
+
+
+def test_dense_admission_single_batched_sync(engine, monkeypatch):
+    """Admitting two requests in one ``_fill_slots`` pass must cost ONE
+    device->host transfer, not one blocking ``int()`` per admission."""
+    b = ContinuousBatcher(engine, slots=4)
+    cfg = engine.cfg
+    for i in range(2):
+        b.submit(Request(i, np.arange(4 + i) % cfg.vocab_size,
+                         max_new_tokens=4))
+    counter = _TransferCounter(monkeypatch)
+    b._fill_slots()
+    assert counter.calls == [2]
+    for i in range(2):
+        assert len(b.active[i].out_tokens) == 1
+
+
+def test_batched_sync_rewrite_preserves_tokens(engine):
+    """The sync-batching rewrite must not change emitted tokens: paged
+    batcher with several lanes completing prefill on the same tick still
+    matches the solo greedy path."""
+    cfg = engine.cfg
+    prompts = [np.arange(4 + 3 * i) % cfg.vocab_size for i in range(3)]
+    b = PagedContinuousBatcher(engine, slots=3, num_blocks=48, block_size=8,
+                               chunk=32, prefix_sharing=False)
+    reqs = [Request(i, p, max_new_tokens=5) for i, p in enumerate(prompts)]
+    for req in reqs:
+        b.submit(req)
+    b.run()
+    for req, prompt in zip(reqs, prompts):
+        ref = engine.generate({"tokens": jnp.asarray(prompt, jnp.int32)[None]},
+                              max_new_tokens=5)
+        assert req.out_tokens == list(np.asarray(ref.tokens)[0])
+
+
+# ============================================= regression: deprecated aliases
+def test_system_profile_deprecated_power_aliases():
+    with pytest.warns(DeprecationWarning, match="power_peak_w"):
+        assert TPU_V5E_PERF.power_peak == TPU_V5E_PERF.power_peak_w
+    with pytest.warns(DeprecationWarning, match="power_idle_w"):
+        assert TPU_V5E_PERF.power_idle == TPU_V5E_PERF.power_idle_w
+
+
+def test_headline_result_deprecated_penalty_alias():
+    hd = HeadlineResult(hybrid=None, baselines={}, best_baseline="all_perf",
+                        savings_vs_best_baseline=0.075,
+                        savings_vs_all_perf=0.075,
+                        runtime_penalty_frac_vs_all_perf=0.05)
+    with pytest.warns(DeprecationWarning, match="frac"):
+        assert hd.runtime_penalty_vs_all_perf == 0.05

@@ -33,9 +33,9 @@ def _diurnal(n=120, seed=5, rate=1.0):
 def test_default_power_states_consistent_with_profile():
     for prof in (EFF, PERF):
         t = default_power_states(prof)
-        assert t.active.power_w == prof.power_peak
-        assert t.idle.power_w == prof.power_idle
-        assert 0.0 < t.sleep.power_w < prof.power_idle
+        assert t.active.power_w == prof.power_peak_w
+        assert t.idle.power_w == prof.power_idle_w
+        assert 0.0 < t.sleep.power_w < prof.power_idle_w
         assert t.off.power_w == 0.0
         assert t.off.wake_s > t.sleep.wake_s > 0.0
         assert t.off.wake_j > t.sleep.wake_j > 0.0
@@ -49,8 +49,8 @@ def test_default_power_states_consistent_with_profile():
 def test_explicit_power_states_override():
     from dataclasses import replace
     table = PowerStateTable(
-        active=PowerState("active", PERF.power_peak),
-        idle=PowerState("idle", PERF.power_idle),
+        active=PowerState("active", PERF.power_peak_w),
+        idle=PowerState("idle", PERF.power_idle_w),
         sleep=PowerState("sleep", 1.0, wake_s=2.0, wake_j=10.0),
         off=PowerState("off", 0.0, wake_s=9.0, wake_j=99.0))
     prof = replace(PERF, name="perf-custom", power_states=table)

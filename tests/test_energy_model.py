@@ -54,7 +54,7 @@ def test_runtime_energy_tradeoff():
     """Paper Fig 4b: the energy savings cost runtime."""
     qs = alpaca_like(1000, seed=2)
     hd = headline(CFG, qs, EFF, PERF, t_in=32, axis="in")
-    assert hd.runtime_penalty_vs_all_perf > 0.0
+    assert hd.runtime_penalty_frac_vs_all_perf > 0.0
 
 
 def test_fig1b_throughput_roofline_shape():
