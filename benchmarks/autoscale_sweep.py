@@ -64,7 +64,8 @@ def _scalers(period_s: float = 10.0) -> Dict[str, Optional[AutoscalerPolicy]]:
 
 
 def autoscale_sweep(n_queries: int = 400, model: str = "llama2-7b",
-                    rate: float = 1.0, seed: int = 0) -> List[List]:
+                    rate: float = 1.0, seed: int = 0,
+                    engine: str = "vectorized") -> List[List]:
     """process x linger x autoscaler over the hybrid fleet, identical
     workload per process so the frontier is apples-to-apples."""
     cfg = get_config(model)
@@ -84,7 +85,7 @@ def autoscale_sweep(n_queries: int = 400, model: str = "llama2-7b",
                 sched = CapacityAwareScheduler(
                     cfg, [eff, perf], {eff.name: 4, perf.name: 2}, cp)
                 r = simulate_fleet(cfg, qs, pools, sched, policy_name=label,
-                                   autoscaler=scaler)
+                                   autoscaler=scaler, engine=engine)
                 sleep_s = sum(p.sleep_s for p in r.per_pool.values())
                 inst_s = sum(s.instances for s in pools.values()) * r.horizon_s
                 rows.append([
@@ -104,7 +105,8 @@ def autoscale_sweep(n_queries: int = 400, model: str = "llama2-7b",
 
 
 def frontier(n_queries: int = 400, model: str = "llama2-7b",
-             rate: float = 1.0, seed: int = 0) -> List[List]:
+             rate: float = 1.0, seed: int = 0,
+             engine: str = "vectorized") -> List[List]:
     """Fleet-energy vs p99 frontier under the diurnal workload: one point
     per (linger, autoscaler) config on a single perf pool, so the effect is
     pure provisioning (no routing confound)."""
@@ -118,7 +120,7 @@ def frontier(n_queries: int = 400, model: str = "llama2-7b",
                 cfg, qs, {"perf": PoolSpec(perf, 4, 2, linger_s=linger)},
                 SingleSystemScheduler(cfg, perf),
                 policy_name=f"linger{linger:g}+{scaler_name}",
-                autoscaler=scaler)
+                autoscaler=scaler, engine=engine)
             rows.append([f"{linger:g}", scaler_name,
                          f"{r.fleet_energy_j:.1f}",
                          f"{r.fleet_j_per_token:.4f}",
@@ -130,7 +132,8 @@ def frontier(n_queries: int = 400, model: str = "llama2-7b",
     return rows
 
 
-def smoke(n_queries: int = 120, model: str = "llama2-7b") -> None:
+def smoke(n_queries: int = 120, model: str = "llama2-7b",
+          engine: str = "vectorized") -> None:
     """CI gate (scripts/ci.sh): the two acceptance invariants, fixed seed."""
     from dataclasses import replace
 
@@ -146,16 +149,18 @@ def smoke(n_queries: int = 120, model: str = "llama2-7b") -> None:
     # with linger=inf and no autoscaler; (b) an ENGAGED machine (autoscaler
     # ticking) whose min_instances floor equals the pool size, so it may
     # never act. Both must be bit-for-bit the plain run.
-    plain = simulate_fleet(cfg, qs, {"perf": PoolSpec(perf, 4, 2)}, sched())
+    plain = simulate_fleet(cfg, qs, {"perf": PoolSpec(perf, 4, 2)}, sched(),
+                           engine=engine)
     tabled = replace(perf, power_states=default_power_states(perf))
     variants = {
         "power-states attached, linger=inf": simulate_fleet(
             cfg, qs, {"perf": PoolSpec(tabled, 4, 2, linger_s=math.inf)},
-            sched(tabled)),
+            sched(tabled), engine=engine),
         "autoscaler engaged but floored": simulate_fleet(
             cfg, qs, {"perf": PoolSpec(perf, 4, 2)}, sched(),
             autoscaler=TargetUtilizationAutoscaler(period_s=10.0,
-                                                   min_instances=4)),
+                                                   min_instances=4),
+            engine=engine),
     }
     rel = 0.0
     for name, armed in variants.items():
@@ -171,7 +176,8 @@ def smoke(n_queries: int = 120, model: str = "llama2-7b") -> None:
     auto = simulate_fleet(
         cfg, qs, {"perf": PoolSpec(perf, 4, 2, linger_s=20.0)}, sched(),
         autoscaler=TargetUtilizationAutoscaler(period_s=10.0, min_instances=1,
-                                               target_util=0.6))
+                                               target_util=0.6),
+        engine=engine)
     assert len(auto.records) == len(qs), "autoscaled fleet lost requests"
     att_s, att_a = plain.slo_attainment(SLO_S), auto.slo_attainment(SLO_S)
     assert att_a >= att_s, f"SLO attainment regressed: {att_a} < {att_s}"
@@ -191,10 +197,13 @@ def main() -> None:
     ap.add_argument("--rate", type=float, default=1.0)
     ap.add_argument("--smoke", action="store_true",
                     help="tiny fixed-seed CI gate; asserts invariants")
+    ap.add_argument("--engine", default="vectorized",
+                    choices=("event", "vectorized"),
+                    help="fleet-sim core (bit-for-bit equivalent engines)")
     args = ap.parse_args()
 
     if args.smoke:
-        smoke(min(args.queries, 120), args.model)
+        smoke(min(args.queries, 120), args.model, engine=args.engine)
         return
 
     print("== energy-vs-p99 frontier (diurnal, single perf pool) ==")

@@ -1,0 +1,204 @@
+"""Fleet-sim core throughput benchmark: vectorized vs legacy event engine.
+
+Full mode drives the vectorized core through a million-request,
+two-thousand-instance diurnal day (the scale the paper's fleet studies
+need) and measures the legacy per-event engine on a prefix of the same
+stream — at ~2k events/s it would need hours for the full run. The
+prefix is sized past the diurnal warmup (where an idle fleet flatters
+the event engine) into its steady-state regime, but still stops
+short of the midday peak that the vectorized number fully includes, so
+the recorded speedup remains a conservative lower bound. Results land in
+``BENCH_fleet.json`` at the repo root.
+
+``--smoke`` is the CI gate: a small fixed-seed config must (a) produce
+bit-for-bit identical ``summary()`` dicts from both engines, (b) clear a
+vectorized events/sec floor, and (c) find a well-formed
+``BENCH_fleet.json`` recording the >= 20x full-scale speedup.
+
+Run: PYTHONPATH=src python benchmarks/fleet_bench.py [--smoke]
+"""
+from __future__ import annotations
+
+import argparse
+import json
+import os
+import resource
+import time
+from typing import Dict
+
+from repro.configs import get_config
+from repro.core.fleet import FleetSimulator, PoolSpec
+from repro.core.fleet_vec import VectorizedFleetSimulator
+from repro.core.scheduler import CostOptimalScheduler
+from repro.core.systems import SystemProfile
+from repro.core.workload import WorkloadSpec, sample_workload
+
+BENCH_PATH = os.path.join(os.path.dirname(__file__), "..", "BENCH_fleet.json")
+
+# The full-scale operating point: a diurnal day at 12000 queries/s across
+# 2000 eff + 2000 perf instances (8 slots each). Deep enough that both
+# engines do real queueing work, shallow enough that the vectorized
+# engine's per-stuck-arrival settlement does not dominate; the wide
+# fleet is where the legacy engine's O(instances)-per-arrival scans
+# bind, which is exactly the regime the vectorized core exists for.
+FULL_REQUESTS = 1_000_000
+FULL_EVENT_PREFIX = 30_000
+FULL_RATE_QPS = 12000.0
+FULL_INSTANCES_PER_POOL = 2000
+SLOTS = 8
+
+# CI floor for the smoke config (events/sec, vectorized engine). Measured
+# ~20x higher on the reference container; the floor only has to catch an
+# order-of-magnitude regression, not enforce the full-scale number.
+SMOKE_EVENTS_PER_S_FLOOR = 2000.0
+
+REQUIRED_KEYS = ("config", "vectorized", "event", "speedup_events_per_s")
+ENGINE_KEYS = ("requests", "events", "wall_s", "events_per_s",
+               "requests_per_s", "peak_rss_mb")
+
+
+def _bench_fleet(model: str):
+    """The probe fleet: an efficiency system (bandwidth-lean, low power,
+    saturating context) against a performance system, both sized so a
+    3B-class model leaves headroom for 8 resident requests."""
+    eff = SystemProfile(name="eff", kind="eff", chips=1, peak_flops=90e12,
+                        hbm_bw=0.8e12, ici_bw=50e9, power_peak_w=220.0,
+                        power_idle_w=60.0, overhead_s=0.02, sat_ctx=4096.0)
+    perf = SystemProfile(name="perf", kind="perf", chips=2, peak_flops=200e12,
+                         hbm_bw=1.25e12, ici_bw=100e9, power_peak_w=350.0,
+                         power_idle_w=60.0, overhead_s=0.01, sat_ctx=None)
+    return get_config(model), eff, perf
+
+
+def _peak_rss_mb() -> float:
+    return resource.getrusage(resource.RUSAGE_SELF).ru_maxrss / 1024.0
+
+
+def _run(sim, qs) -> Dict:
+    t0 = time.perf_counter()
+    sim.run(qs)
+    wall_s = time.perf_counter() - t0
+    return {
+        "requests": len(qs),
+        "events": sim.events_processed,
+        "wall_s": round(wall_s, 3),
+        "events_per_s": round(sim.events_processed / wall_s, 1),
+        "requests_per_s": round(len(qs) / wall_s, 1),
+        "peak_rss_mb": round(_peak_rss_mb(), 1),
+    }
+
+
+def bench(n_requests: int = FULL_REQUESTS,
+          n_event: int = FULL_EVENT_PREFIX,
+          rate_qps: float = FULL_RATE_QPS,
+          instances: int = FULL_INSTANCES_PER_POOL,
+          model: str = "qwen2.5-3b", seed: int = 0) -> Dict:
+    """Measure both engines and write ``BENCH_fleet.json``."""
+    cfg, eff, perf = _bench_fleet(model)
+    qs = sample_workload(n_requests, seed=seed,
+                         spec=WorkloadSpec(rate_qps=rate_qps),
+                         arrival_process="diurnal")
+    pools = {"eff": PoolSpec(eff, instances=instances, slots=SLOTS),
+             "perf": PoolSpec(perf, instances=instances, slots=SLOTS)}
+
+    # Event engine first (prefix): ru_maxrss is a process-wide high-water
+    # mark, so the small run must not inherit the big run's footprint.
+    print(f"event engine: {n_event} requests (prefix) ...", flush=True)
+    evt = _run(FleetSimulator(cfg, pools, CostOptimalScheduler(cfg, [eff, perf])),
+               qs[:n_event])
+    print(f"  {evt['wall_s']}s  {evt['events_per_s']} ev/s  "
+          f"{evt['requests_per_s']} req/s")
+
+    print(f"vectorized engine: {n_requests} requests ...", flush=True)
+    vec = _run(VectorizedFleetSimulator(cfg, pools,
+                                        CostOptimalScheduler(cfg, [eff, perf])),
+               qs)
+    print(f"  {vec['wall_s']}s  {vec['events_per_s']} ev/s  "
+          f"{vec['requests_per_s']} req/s")
+
+    out = {
+        "config": {
+            "model": model, "seed": seed, "arrival_process": "diurnal",
+            "rate_qps": rate_qps, "instances_per_pool": instances,
+            "pools": 2, "slots": SLOTS, "requests": n_requests,
+            "event_engine_prefix": n_event,
+        },
+        "vectorized": vec,
+        "event": evt,
+        "speedup_events_per_s": round(
+            vec["events_per_s"] / evt["events_per_s"], 1),
+    }
+    with open(BENCH_PATH, "w") as f:
+        json.dump(out, f, indent=2)
+        f.write("\n")
+    print(f"speedup: {out['speedup_events_per_s']}x events/s  "
+          f"-> {os.path.relpath(BENCH_PATH)}")
+    return out
+
+
+def smoke(model: str = "qwen2.5-3b") -> None:
+    """CI gate: engine equivalence bit-for-bit, a vectorized events/sec
+    floor, and a well-formed recorded BENCH_fleet.json."""
+    cfg, eff, perf = _bench_fleet(model)
+    qs = sample_workload(2000, seed=0, spec=WorkloadSpec(rate_qps=40.0),
+                         arrival_process="diurnal")
+    pools = {"eff": PoolSpec(eff, instances=8, slots=4),
+             "perf": PoolSpec(perf, instances=8, slots=4)}
+    vec_sim = VectorizedFleetSimulator(cfg, pools,
+                                       CostOptimalScheduler(cfg, [eff, perf]))
+    t0 = time.perf_counter()
+    r_vec = vec_sim.run(qs)
+    ev_per_s = vec_sim.events_processed / (time.perf_counter() - t0)
+    r_evt = FleetSimulator(cfg, pools,
+                           CostOptimalScheduler(cfg, [eff, perf])).run(qs)
+    s_vec, s_evt = r_vec.summary(), r_evt.summary()
+    assert s_vec == s_evt, (
+        "engine summaries diverge:\n"
+        + "\n".join(f"  {k}: vec={s_vec[k]!r} evt={s_evt.get(k)!r}"
+                    for k in s_vec if s_vec[k] != s_evt.get(k)))
+    assert ev_per_s >= SMOKE_EVENTS_PER_S_FLOOR, (
+        f"vectorized engine too slow: {ev_per_s:.0f} ev/s "
+        f"< floor {SMOKE_EVENTS_PER_S_FLOOR:.0f}")
+
+    assert os.path.exists(BENCH_PATH), \
+        "BENCH_fleet.json missing: run benchmarks/fleet_bench.py (full mode)"
+    with open(BENCH_PATH) as f:
+        rec = json.load(f)
+    for k in REQUIRED_KEYS:
+        assert k in rec, f"BENCH_fleet.json missing key {k!r}"
+    for side in ("vectorized", "event"):
+        for k in ENGINE_KEYS:
+            assert k in rec[side], f"BENCH_fleet.json {side} missing {k!r}"
+    assert rec["speedup_events_per_s"] >= 20.0, (
+        f"recorded full-scale speedup {rec['speedup_events_per_s']}x "
+        "below the 20x bar")
+    assert rec["config"]["requests"] >= 1_000_000
+    assert rec["config"]["instances_per_pool"] * rec["config"]["pools"] >= 1000
+    print(f"fleet-bench smoke OK: engines bit-identical on "
+          f"{len(qs)} requests, vec {ev_per_s:.0f} ev/s, recorded "
+          f"full-scale speedup {rec['speedup_events_per_s']}x")
+
+
+def main() -> None:
+    ap = argparse.ArgumentParser(description=__doc__)
+    ap.add_argument("--requests", type=int, default=FULL_REQUESTS)
+    ap.add_argument("--event-requests", type=int, default=FULL_EVENT_PREFIX,
+                    help="prefix length for the legacy event engine")
+    ap.add_argument("--rate", type=float, default=FULL_RATE_QPS)
+    ap.add_argument("--instances", type=int,
+                    default=FULL_INSTANCES_PER_POOL,
+                    help="instances per pool (two pools)")
+    ap.add_argument("--model", default="qwen2.5-3b")
+    ap.add_argument("--smoke", action="store_true",
+                    help="CI gate: equivalence + events/sec floor + "
+                         "recorded-artifact schema")
+    args = ap.parse_args()
+    if args.smoke:
+        smoke(args.model)
+        return
+    bench(args.requests, args.event_requests, args.rate, args.instances,
+          args.model)
+
+
+if __name__ == "__main__":
+    main()

@@ -32,6 +32,12 @@ python benchmarks/fleet_sweep.py --smoke
 # and show non-zero block reuse on a shared-prefix workload.
 python benchmarks/paged_serving.py --smoke
 
+# Vectorized fleet-sim gate: the default engine must stay bit-for-bit
+# identical to the legacy event engine on a fixed-seed diurnal config,
+# clear an events/sec floor, and the tracked BENCH_fleet.json must be
+# well-formed with its >= 20x full-scale speedup intact.
+python benchmarks/fleet_bench.py --smoke
+
 # Energy-proportionality gate: with power states enabled but linger=inf and
 # the autoscaler off, the fleet must reproduce static-fleet energy
 # bit-for-bit (per-request and totals); under the diurnal workload the

@@ -22,7 +22,9 @@ from repro.core.scheduler import (Scheduler, ThresholdScheduler, CostOptimalSche
 from repro.core.simulator import (simulate, summarize, threshold_sweep,
                                   optimal_threshold, headline, SimResult,
                                   SweepPoint, HeadlineResult)
-from repro.core.fleet import (FleetSimulator, FleetSimResult, PoolSpec,
-                              RequestRecord, PoolResult, simulate_fleet,
-                              AutoscalerPolicy, TargetUtilizationAutoscaler,
+from repro.core.fleet import (FLEET_ENGINES, FleetSimulator, FleetSimResult,
+                              PoolSpec, RequestRecord, PoolResult,
+                              simulate_fleet, AutoscalerPolicy,
+                              TargetUtilizationAutoscaler,
                               QueueDepthAutoscaler)
+from repro.core.fleet_vec import VectorizedFleetSimulator

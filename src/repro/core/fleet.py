@@ -152,16 +152,82 @@ class PoolResult:
     sleep_s: float = 0.0          # instance-seconds spent in sleep/off (<= horizon)
 
 
-@dataclass
 class FleetSimResult:
-    policy: str
-    records: List[RequestRecord]
-    per_pool: Dict[str, PoolResult]
-    horizon_s: float              # last completion time
+    """Simulation outcome: request records (or their struct-of-arrays
+    equivalent from the vectorized engine), per-pool accounting, horizon.
+
+    Backed either by a list of ``RequestRecord`` (event engine) or by
+    rid-indexed numpy arrays (``from_arrays``, vectorized engine); each view
+    is materialized lazily from the other, so metrics are computed one way —
+    over the arrays — whichever engine produced the result. Every metric is
+    bit-for-bit what the historical list-comprehension code computed (same
+    float values elementwise, same reduction order/algorithm).
+    """
+
+    def __init__(self, policy: str, records: Optional[List[RequestRecord]],
+                 per_pool: Dict[str, PoolResult], horizon_s: float, *,
+                 _queries: Optional[Sequence[Query]] = None,
+                 _pool_code: Optional[np.ndarray] = None,
+                 _pool_names: Optional[Sequence[str]] = None,
+                 _arrays: Optional[Dict[str, np.ndarray]] = None):
+        self.policy = policy
+        self.per_pool = per_pool
+        self.horizon_s = horizon_s
+        self._records = records
+        self._queries = _queries          # rid-ordered (array-backed results)
+        self._pool_code = _pool_code      # rid -> index into _pool_names
+        self._pool_names = _pool_names
+        self._arrays = _arrays            # rid-indexed t_*/energy arrays
+        self._sorted_latency_s: Optional[np.ndarray] = None
+
+    @classmethod
+    def from_arrays(cls, policy: str, queries: Sequence[Query],
+                    pool_code: np.ndarray, pool_names: Sequence[str],
+                    arrays: Dict[str, np.ndarray],
+                    per_pool: Dict[str, PoolResult],
+                    horizon_s: float) -> "FleetSimResult":
+        """Array-backed result (vectorized engine): ``arrays`` holds
+        ``t_arrival_s``/``t_start_s``/``t_decode_s``/``t_done_s``/``energy_j``
+        indexed by rid; ``pool_code[rid]`` indexes ``pool_names``."""
+        return cls(policy, None, per_pool, horizon_s, _queries=queries,
+                   _pool_code=pool_code, _pool_names=pool_names,
+                   _arrays=arrays)
+
+    @property
+    def records(self) -> List[RequestRecord]:
+        if self._records is None:
+            a = self._arrays
+            self._records = [
+                RequestRecord(rid, q, self._pool_names[self._pool_code[rid]],
+                              t_arrival=float(a["t_arrival_s"][rid]),
+                              t_start=float(a["t_start_s"][rid]),
+                              t_decode=float(a["t_decode_s"][rid]),
+                              t_done=float(a["t_done_s"][rid]),
+                              energy_j=float(a["energy_j"][rid]))
+                for rid, q in enumerate(self._queries)]
+        return self._records
+
+    def _metric_arrays(self) -> Dict[str, np.ndarray]:
+        if self._arrays is None:
+            recs = self._records
+            self._arrays = {
+                "t_arrival_s": np.array([r.t_arrival for r in recs]),
+                "t_start_s": np.array([r.t_start for r in recs]),
+                "t_decode_s": np.array([r.t_decode for r in recs]),
+                "t_done_s": np.array([r.t_done for r in recs]),
+                "energy_j": np.array([r.energy_j for r in recs]),
+            }
+        return self._arrays
+
+    def __len__(self) -> int:
+        if self._queries is not None:
+            return len(self._queries)
+        return len(self._records)
 
     @property
     def total_energy_j(self) -> float:
-        return sum(r.energy_j for r in self.records)
+        # sequential left-fold, as the historical sum over records
+        return sum(self._metric_arrays()["energy_j"].tolist())
 
     @property
     def idle_energy_j(self) -> float:
@@ -174,7 +240,9 @@ class FleetSimResult:
 
     @property
     def tokens(self) -> int:
-        return sum(r.query.m + r.query.n for r in self.records)
+        if self._queries is not None:
+            return sum(q.m + q.n for q in self._queries)
+        return sum(r.query.m + r.query.n for r in self._records)
 
     @property
     def j_per_token(self) -> float:
@@ -191,14 +259,20 @@ class FleetSimResult:
 
     def slo_attainment(self, slo_s: float) -> float:
         """Fraction of requests whose end-to-end latency met ``slo_s``."""
-        if not self.records:
+        if not len(self):
             return 1.0
-        return float(np.mean([r.latency_s <= slo_s for r in self.records]))
+        a = self._metric_arrays()
+        return float(np.mean((a["t_done_s"] - a["t_arrival_s"]) <= slo_s))
 
     def latency_percentile(self, p: float) -> float:
-        if not self.records:
+        if not len(self):
             return 0.0
-        return float(np.percentile([r.latency_s for r in self.records], p))
+        if self._sorted_latency_s is None:
+            # sorted once per result: p50 + p99 + any further percentile
+            # reuse it instead of re-sorting per call
+            a = self._metric_arrays()
+            self._sorted_latency_s = np.sort(a["t_done_s"] - a["t_arrival_s"])
+        return float(np.percentile(self._sorted_latency_s, p))
 
     @property
     def p50_latency_s(self) -> float:
@@ -210,9 +284,10 @@ class FleetSimResult:
 
     @property
     def mean_wait_s(self) -> float:
-        if not self.records:
+        if not len(self):
             return 0.0
-        return float(np.mean([r.wait_s for r in self.records]))
+        a = self._metric_arrays()
+        return float(np.mean(a["t_start_s"] - a["t_arrival_s"]))
 
     def summary(self) -> Dict[str, float]:
         """Flat scalar summary (one CSV row): per-pool utilization appears
@@ -588,6 +663,7 @@ class FleetSimulator:
                              "dispatch maps a chosen system back to its pool "
                              "by name")
         self._ran = False
+        self.events_processed = 0    # heap pops, incl. arrivals/stale events
 
     # ------------------------------------------------------------------ run
     def run(self, queries: Sequence[Query],
@@ -619,6 +695,7 @@ class FleetSimulator:
 
         while events:
             t, _, kind, payload = heapq.heappop(events)
+            self.events_processed += 1
             if kind == ARRIVAL:
                 self._arrivals_left -= 1
                 rid, q = payload
@@ -885,6 +962,9 @@ class FleetSimulator:
         p.result.wake_count = wakes
 
 
+FLEET_ENGINES = ("event", "vectorized")
+
+
 def simulate_fleet(cfg: ModelConfig, queries: Sequence[Query],
                    pools: Dict[str, PoolSpec], scheduler: Scheduler, *,
                    queue_discipline: str = "fifo",
@@ -892,8 +972,23 @@ def simulate_fleet(cfg: ModelConfig, queries: Sequence[Query],
                    model: Optional[CostModel] = None,
                    autoscaler: Union[AutoscalerPolicy,
                                      Dict[str, AutoscalerPolicy],
-                                     None] = None) -> FleetSimResult:
-    """One-call wrapper: build a FleetSimulator and run the workload."""
+                                     None] = None,
+                   engine: str = "vectorized") -> FleetSimResult:
+    """One-call wrapper: build a fleet simulator and run the workload.
+
+    ``engine="vectorized"`` (the default) is the struct-of-arrays engine
+    (``core.fleet_vec``), ~20-40x faster at fleet scale;
+    ``engine="event"`` is the reference one-event-at-a-time loop above.
+    The engines are bit-for-bit equivalent (gated by
+    tests/test_fleet_vec.py and ``benchmarks/fleet_bench.py --smoke``)."""
+    if engine not in FLEET_ENGINES:
+        raise ValueError(f"unknown engine {engine!r}; "
+                         f"choose from {FLEET_ENGINES}")
+    if engine == "vectorized":
+        from repro.core.fleet_vec import VectorizedFleetSimulator
+        return VectorizedFleetSimulator(
+            cfg, pools, scheduler, queue_discipline=queue_discipline,
+            model=model, autoscaler=autoscaler).run(queries, policy_name)
     return FleetSimulator(cfg, pools, scheduler,
                           queue_discipline=queue_discipline, model=model,
                           autoscaler=autoscaler).run(queries, policy_name)

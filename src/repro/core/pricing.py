@@ -40,7 +40,8 @@ from typing import (TYPE_CHECKING, Dict, Iterable, List, Optional, Protocol,
 import numpy as np
 
 from repro.configs.base import ModelConfig
-from repro.core.perf_model import QueryPhases, query_phases
+from repro.core.perf_model import (BatchPhases, QueryPhases, query_phases,
+                                   query_phases_batch)
 from repro.core.systems import SystemProfile
 
 if TYPE_CHECKING:   # avoid a runtime cycle: carbon imports pricing
@@ -78,6 +79,11 @@ class AnalyticOracle:
     def phases(self, cfg: ModelConfig, m: int, n: int, system: SystemProfile,
                batch: int = 1) -> QueryPhases:
         return query_phases(cfg, m, n, system, batch)
+
+    def phases_batch(self, cfg: ModelConfig, m, n, system: SystemProfile,
+                     batch: int = 1) -> BatchPhases:
+        """Vectorized ``phases`` — elementwise bit-identical to the scalar path."""
+        return query_phases_batch(cfg, m, n, system, batch)
 
     def __repr__(self) -> str:
         return "AnalyticOracle()"
@@ -345,6 +351,12 @@ class CalibratedOracle:
                batch: int = 1) -> QueryPhases:
         return query_phases(cfg, m, n, self.resolve(system), batch)
 
+    def phases_batch(self, cfg: ModelConfig, m, n, system: SystemProfile,
+                     batch: int = 1) -> BatchPhases:
+        """Vectorized ``phases``: resolve the calibrated profile once, then
+        evaluate the roofline over arrays (bit-identical elementwise)."""
+        return query_phases_batch(cfg, m, n, self.resolve(system), batch)
+
     # ------------------------------------------------------------- artifacts
     def dump(self, path: str) -> None:
         with open(path, "w") as f:
@@ -442,6 +454,66 @@ class CostModel:
             self._memo.popitem(last=False)
         return ph
 
+    def _q_batch(self, x: np.ndarray) -> np.ndarray:
+        """Vectorized ``_q`` (same values: numpy round is banker's, like
+        Python's)."""
+        x = np.asarray(x).astype(np.int64)
+        if self.quant == 1:
+            return x
+        bucketed = np.maximum(
+            1, np.round(x / self.quant).astype(np.int64) * self.quant)
+        return np.where(x <= 8 * self.quant, x, bucketed)
+
+    def price_batch(self, m, n, s: SystemProfile,
+                    batch: int = 1) -> BatchPhases:
+        """Vectorized ``phases`` over aligned (m, n) arrays: quantize, then
+        evaluate Eq. 1's roofline terms in one numpy pass, bypassing the
+        per-call LRU memo. Elementwise bit-identical to ``phases`` (asserted
+        in tests/test_fleet_vec.py). Oracles without a ``phases_batch``
+        method (e.g. ``TableOracle``) fall back to deduplicated scalar calls,
+        which preserves bit-identity at reduced speed."""
+        version = getattr(self.oracle, "version", 0)
+        if version != self._oracle_version:
+            self._memo.clear()
+            self._oracle_version = version
+        qm = self._q_batch(m)
+        qn = self._q_batch(n)
+        fn = getattr(self.oracle, "phases_batch", None)
+        if fn is not None:
+            return fn(self.cfg, qm, qn, s, batch)
+        # scalar fallback: one oracle call per distinct quantized (m, n) pair
+        pairs = np.stack([qm, qn], axis=1)
+        uniq, inverse = np.unique(pairs, axis=0, return_inverse=True)
+        fields = np.empty((5, len(uniq)), dtype=np.float64)
+        for i, (um, un) in enumerate(uniq):
+            ph = self.oracle.phases(self.cfg, int(um), int(un), s, batch)
+            fields[:, i] = (ph.t_prefill, ph.t_decode, ph.t_overhead,
+                            ph.util_prefill, ph.util_decode)
+        t_pf, t_dec, t_ov, u_pf, u_dec = fields[:, inverse]
+        return BatchPhases(t_prefill=t_pf, t_decode=t_dec, t_overhead=t_ov,
+                           util_prefill=u_pf, util_decode=u_dec)
+
+    def runtime_batch(self, m, n, s: SystemProfile,
+                      batch: int = 1) -> np.ndarray:
+        """Vectorized ``runtime`` (same association as ``QueryPhases.total``)."""
+        return self.price_batch(m, n, s, batch).total
+
+    def energy_batch(self, m, n, s: SystemProfile,
+                     batch: int = 1) -> np.ndarray:
+        """Vectorized ``energy`` — same accumulation order as the scalar
+        path: prefill, then decode, then overhead."""
+        ph = self.price_batch(m, n, s, batch)
+
+        def power_w(util: np.ndarray) -> np.ndarray:
+            u = np.minimum(np.maximum(util, 0.0), 1.0)
+            return s.chips * (s.power_idle_w
+                              + (s.power_peak_w - s.power_idle_w) * u)
+
+        e_j = ph.t_prefill * power_w(ph.util_prefill)
+        e_j = e_j + ph.t_decode * power_w(ph.util_decode)
+        e_j = e_j + ph.t_overhead * s.power(0.0)
+        return e_j
+
     def runtime(self, m: int, n: int, s: SystemProfile, batch: int = 1) -> float:
         """R(m, n, s) in seconds (Eq. 1's runtime term)."""
         return self.phases(m, n, s, batch).total
@@ -473,6 +545,23 @@ class CostModel:
         c = cp.lam * eterm + (1.0 - cp.lam) * rterm
         if wait_s:
             c += (1.0 - cp.lam) * wait_s / cp.r_norm
+        return c
+
+    def cost_batch(self, m, n, s: SystemProfile, *, batch: int = 1,
+                   wait_s: float = 0.0,
+                   t_exec: Optional[float] = None) -> np.ndarray:
+        """Vectorized ``cost`` over aligned (m, n) arrays — same term order
+        and association as the scalar path, so each element is bit-identical
+        to the corresponding ``cost`` call."""
+        cp = self.cp
+        eterm = self.energy_batch(m, n, s, batch) / cp.e_norm
+        if t_exec is not None and self.carbon is not None:
+            eterm = eterm * (self.carbon.intensity(t_exec)
+                             / self.carbon.mean_g_per_kwh)
+        rterm = self.runtime_batch(m, n, s, batch) / cp.r_norm
+        c = cp.lam * eterm + (1.0 - cp.lam) * rterm
+        if wait_s:
+            c = c + (1.0 - cp.lam) * wait_s / cp.r_norm
         return c
 
     def wait_cost(self, wait_s: float) -> float:

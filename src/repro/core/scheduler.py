@@ -33,6 +33,8 @@ import heapq
 from dataclasses import dataclass, field
 from typing import Dict, List, Optional, Sequence, Tuple
 
+import numpy as np
+
 from repro.configs.base import ModelConfig
 from repro.core.pricing import AnalyticOracle, CostModel, CostParams
 from repro.core.systems import SystemProfile
@@ -58,7 +60,7 @@ def kv_blocks_needed(tokens: int, block_size: int) -> int:
     return -(-tokens // block_size)
 
 
-@dataclass
+@dataclass(slots=True)
 class PoolSnapshot:
     """Observable state of one pool at dispatch time."""
     system: SystemProfile
@@ -128,7 +130,7 @@ class PoolSnapshot:
         return runtime_s * (needed - free) / needed
 
 
-@dataclass
+@dataclass(slots=True)
 class FleetState:
     """Snapshot handed to ``Scheduler.dispatch`` by the fleet simulator or
     the serving router. Maps pool/system name -> PoolSnapshot."""
@@ -163,6 +165,17 @@ class Scheduler:
 
     def choose(self, q: Query) -> SystemProfile:
         raise NotImplementedError
+
+    def choose_batch(self, m, n) -> Optional[np.ndarray]:
+        """Vectorized ``choose`` over aligned (m, n) token-count arrays:
+        indices into ``self.systems``, elementwise identical to calling
+        ``choose`` per query — or None when the policy has no batch path.
+
+        Only meaningful for policies whose decision is (m, n)-only (both
+        ``dispatch`` and ``observe`` are the base no-ops); the vectorized
+        fleet engine uses it to precompute a whole workload's dispatch in
+        one pass instead of snapshotting the fleet per arrival."""
+        return None
 
     def dispatch(self, q: Query, fleet: Optional[FleetState] = None) -> SystemProfile:
         """Online dispatch under identical queueing dynamics for every policy.
@@ -206,6 +219,18 @@ class ThresholdScheduler(Scheduler):
             small = q.m <= self.t_in and q.n <= self.t_out
         return self.eff if small else self.perf
 
+    def choose_batch(self, m, n) -> np.ndarray:
+        m = np.asarray(m)
+        n = np.asarray(n)
+        if self.axis == "in":
+            small = m <= self.t_in
+        elif self.axis == "out":
+            small = n <= self.t_out
+        else:
+            small = (m <= self.t_in) & (n <= self.t_out)
+        # systems == [eff, perf] (constructor order)
+        return np.where(small, 0, 1)
+
 
 class CostOptimalScheduler(Scheduler):
     """Per-query argmin_s U(m, n, s) — exact for the uncapacitated Eq. 2."""
@@ -213,6 +238,13 @@ class CostOptimalScheduler(Scheduler):
     def choose(self, q: Query) -> SystemProfile:
         return min(self.systems,
                    key=lambda s: self.model.cost(q.m, q.n, s))
+
+    def choose_batch(self, m, n) -> np.ndarray:
+        # np.argmin keeps the first minimum, exactly like min() over the
+        # systems list; cost_batch is elementwise bit-identical to cost()
+        costs = np.stack([self.model.cost_batch(m, n, s)
+                          for s in self.systems])
+        return np.argmin(costs, axis=0)
 
 
 @dataclass
@@ -241,6 +273,39 @@ class CapacityAwareScheduler(Scheduler):
                       for s in systems}
         for p in self.pools.values():
             heapq.heapify(p.free_at)
+        self._rid_cost: Dict[str, "np.ndarray"] = {}
+        self._rid_runtime_s: Dict[str, "np.ndarray"] = {}
+
+    def prepare_batch(self, m, n) -> None:
+        """Precompute per-system wait-free cost and runtime tables over a
+        whole workload's (m, n) arrays, enabling ``dispatch_rid``. Called by
+        the vectorized fleet engine before its event loop."""
+        for s in self.systems:
+            self._rid_cost[s.name] = self.model.cost_batch(m, n, s)
+            self._rid_runtime_s[s.name] = self.model.runtime_batch(m, n, s)
+
+    def dispatch_rid(self, rid: int, q: Query,
+                     fleet: Optional[FleetState]) -> SystemProfile:
+        """Table-backed ``dispatch``: identical decision (the scalar path's
+        ``cost(..., wait_s=w)`` equals the wait-free cost plus the wait term,
+        in the same float association), with all per-query pricing read from
+        the ``prepare_batch`` tables instead of the scalar memo."""
+        if fleet is None:
+            return self.choose(q)
+        cp = self.cp
+        best, best_c = None, float("inf")
+        for s in self.systems:
+            snap = fleet.for_system(s)
+            wait_s = snap.est_wait_s if snap is not None else 0.0
+            if snap is not None:
+                wait_s += snap.mem_wait_s(q.m, q.n,
+                                          self._rid_runtime_s[s.name][rid])
+            c = self._rid_cost[s.name][rid]
+            if wait_s:
+                c = c + (1.0 - cp.lam) * wait_s / cp.r_norm
+            if c < best_c:
+                best, best_c = s, c
+        return best
 
     def _price(self, q: Query) -> Tuple[_Pool, float, float, float]:
         """Pure pricing against the internal reservation heaps:
@@ -275,6 +340,16 @@ class CapacityAwareScheduler(Scheduler):
         start = max(q.arrival_s, pool.free_at[0])
         heapq.heapreplace(pool.free_at,
                           start + self.model.runtime(q.m, q.n, system))
+
+    def observe_rid(self, rid: int, q: Query, system: SystemProfile) -> None:
+        """``observe`` with the booked runtime read from the ``prepare_batch``
+        table (bit-identical to the scalar ``model.runtime``)."""
+        pool = self.pools.get(system.name)
+        if pool is None:
+            return
+        start = max(q.arrival_s, pool.free_at[0])
+        heapq.heapreplace(pool.free_at,
+                          start + self._rid_runtime_s[system.name][rid])
 
     def dispatch(self, q: Query, fleet: Optional[FleetState] = None) -> SystemProfile:
         """Queue-aware dispatch: price each pool's *observed* estimated wait
@@ -318,6 +393,9 @@ class SingleSystemScheduler(Scheduler):
 
     def choose(self, q: Query) -> SystemProfile:
         return self.system
+
+    def choose_batch(self, m, n) -> np.ndarray:
+        return np.zeros(len(np.asarray(m)), dtype=np.int64)
 
 
 class RoundRobinScheduler(Scheduler):

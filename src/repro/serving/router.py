@@ -142,17 +142,32 @@ class FleetRouter:
             if cb is not None:
                 busy = sum(1 for r in cb.active if r is not None)
                 queue_len = len(cb.queue)
-                backlog = sum(self.model.runtime(len(r.tokens),
-                                                 r.max_new_tokens, sysp)
-                              for r in cb.queue)
-                for r in cb.active:            # residual decode of residents
-                    if r is None:
-                        continue
-                    rem = max(0, r.max_new_tokens - len(r.out_tokens))
-                    ph = self.model.phases(len(r.tokens), r.max_new_tokens,
-                                           sysp)
-                    backlog += ph.t_decode / max(1, r.max_new_tokens) * rem
-                est_wait = backlog / max(1, slots)
+                # batched pricing: one runtime_batch over the queue and one
+                # price_batch over the active lanes replace the per-request
+                # scalar calls; summing the per-request terms left-to-right
+                # in queue-then-active order reproduces the scalar
+                # accumulation bit-for-bit
+                vals: List[float] = []
+                if cb.queue:
+                    m_arr = np.fromiter((len(r.tokens) for r in cb.queue),
+                                        np.int64, queue_len)
+                    n_arr = np.fromiter((r.max_new_tokens for r in cb.queue),
+                                        np.int64, queue_len)
+                    vals += self.model.runtime_batch(m_arr, n_arr,
+                                                     sysp).tolist()
+                act = [r for r in cb.active if r is not None]
+                if act:                        # residual decode of residents
+                    m_arr = np.fromiter((len(r.tokens) for r in act),
+                                        np.int64, len(act))
+                    n_arr = np.fromiter((r.max_new_tokens for r in act),
+                                        np.int64, len(act))
+                    rem = np.fromiter(
+                        (max(0, r.max_new_tokens - len(r.out_tokens))
+                         for r in act), np.int64, len(act))
+                    ph = self.model.price_batch(m_arr, n_arr, sysp, batch=1)
+                    vals += (ph.t_decode / np.maximum(1, n_arr)
+                             * rem).tolist()
+                est_wait = sum(vals) / max(1, slots)
             # mirror the fleet simulator's awake-count view: serving pools
             # run hot (no power machine in front of a live batcher), so every
             # instance is awake and waking capacity is never pending — but

@@ -1,0 +1,172 @@
+"""Vectorized fleet-sim core: bit-for-bit equivalence with the legacy
+event engine across seeds, disciplines, power management, and paged-KV
+admission; batched-pricing bitwise identity; golden arrival-sampler pins
+(the arrival path is shared state between engines — a sampler drift would
+silently re-baseline both sides of the equivalence gate); the sorted-
+latency percentile cache; and engine-argument validation."""
+import math
+
+import numpy as np
+import pytest
+
+from repro.configs import get_config
+from repro.core import (CapacityAwareScheduler, CostOptimalScheduler,
+                        FleetSimulator, PoolSpec, WorkloadSpec,
+                        generate_arrivals, sample_workload, simulate_fleet)
+from repro.core.fleet import FLEET_ENGINES, TargetUtilizationAutoscaler
+from repro.core.fleet_vec import VectorizedFleetSimulator
+from repro.core.pricing import AnalyticOracle, CostModel
+from repro.core.systems import SystemProfile
+
+CFG = get_config("qwen2.5-3b")
+
+
+def _systems():
+    eff = SystemProfile(name="eff", kind="eff", chips=1, peak_flops=90e12,
+                        hbm_bw=0.8e12, ici_bw=50e9, power_peak_w=220.0,
+                        power_idle_w=60.0, overhead_s=0.02, sat_ctx=4096.0)
+    perf = SystemProfile(name="perf", kind="perf", chips=2, peak_flops=200e12,
+                         hbm_bw=1.25e12, ici_bw=100e9, power_peak_w=350.0,
+                         power_idle_w=60.0, overhead_s=0.01, sat_ctx=None)
+    return eff, perf
+
+
+def _run_both(seed, disc, autoscale, kv, n=220):
+    """One config through both engines; the scheduler family alternates
+    with the seed so the table-backed CapacityAware fast path and the
+    base CostOptimal path are both exercised."""
+    eff, perf = _systems()
+    qs = sample_workload(n, seed=seed, spec=WorkloadSpec(rate_qps=6.0),
+                         arrival_process="mmpp" if seed % 2 else "diurnal")
+    pools = {
+        "eff": PoolSpec(eff, instances=3, slots=4,
+                        kv_blocks=512 if kv else 0, block_size=16,
+                        linger_s=20.0 if autoscale else math.inf),
+        "perf": PoolSpec(perf, instances=2, slots=4,
+                         kv_blocks=512 if kv else 0, block_size=16),
+    }
+    autos = ({"eff": TargetUtilizationAutoscaler(period_s=15.0,
+                                                 min_instances=1)}
+             if autoscale else None)
+    out = []
+    for engine in FLEET_ENGINES:
+        sched = (CapacityAwareScheduler(CFG, [eff, perf],
+                                        {"eff": 3, "perf": 2})
+                 if seed % 2 else CostOptimalScheduler(CFG, [eff, perf]))
+        out.append(simulate_fleet(CFG, qs, pools, sched,
+                                  queue_discipline=disc, autoscaler=autos,
+                                  engine=engine))
+    return out
+
+
+# ------------------------------------------------------- equivalence gate
+@pytest.mark.parametrize("seed", [0, 1, 2])
+@pytest.mark.parametrize("disc", ["fifo", "sjf"])
+@pytest.mark.parametrize("autoscale,kv",
+                         [(False, False), (True, False), (False, True),
+                          (True, True)])
+def test_engines_bit_identical(seed, disc, autoscale, kv):
+    evt, vec = _run_both(seed, disc, autoscale, kv)
+    assert evt.summary() == vec.summary()          # bit-for-bit, no tolerance
+    for ra, rb in zip(evt.records, vec.records):
+        assert (ra.rid, ra.pool, ra.t_arrival, ra.t_start, ra.t_decode,
+                ra.t_done, ra.energy_j) == \
+               (rb.rid, rb.pool, rb.t_arrival, rb.t_start, rb.t_decode,
+                rb.t_done, rb.energy_j)
+    for k in evt.per_pool:
+        assert vars(evt.per_pool[k]) == vars(vec.per_pool[k])
+
+
+def test_engine_classes_agree_with_dispatcher():
+    """simulate_fleet(engine=...) must route to the same classes callers
+    can construct directly."""
+    eff, perf = _systems()
+    qs = sample_workload(60, seed=5, spec=WorkloadSpec(rate_qps=4.0))
+    pools = {"eff": PoolSpec(eff, 2, 2), "perf": PoolSpec(perf, 2, 2)}
+    direct = VectorizedFleetSimulator(
+        CFG, pools, CostOptimalScheduler(CFG, [eff, perf])).run(qs)
+    routed = simulate_fleet(CFG, qs, pools,
+                            CostOptimalScheduler(CFG, [eff, perf]),
+                            engine="vectorized")
+    assert direct.summary() == routed.summary()
+    legacy = FleetSimulator(CFG, pools,
+                            CostOptimalScheduler(CFG, [eff, perf])).run(qs)
+    assert legacy.summary() == routed.summary()
+
+
+def test_engine_argument_validated():
+    eff, perf = _systems()
+    qs = sample_workload(5, seed=0)
+    pools = {"eff": PoolSpec(eff, 1, 1), "perf": PoolSpec(perf, 1, 1)}
+    with pytest.raises(ValueError):
+        simulate_fleet(CFG, qs, pools,
+                       CostOptimalScheduler(CFG, [eff, perf]),
+                       engine="turbo")
+
+
+# --------------------------------------------------------- batched pricing
+def test_batched_pricing_bitwise():
+    """price/cost/runtime_batch must equal the scalar calls bit-for-bit:
+    the vectorized engine's settlement arithmetic is transcribed, not
+    approximated."""
+    eff, perf = _systems()
+    model = CostModel(CFG, AnalyticOracle())
+    rng = np.random.default_rng(0)
+    m = rng.integers(8, 2048, 64)
+    n = rng.integers(1, 512, 64)
+    for s in (eff, perf):
+        cb = model.cost_batch(m, n, s)
+        rb = model.runtime_batch(m, n, s)
+        eb = model.energy_batch(m, n, s)
+        for k in range(len(m)):
+            assert cb[k] == model.cost(int(m[k]), int(n[k]), s)
+            assert rb[k] == model.runtime(int(m[k]), int(n[k]), s)
+            assert eb[k] == model.energy(int(m[k]), int(n[k]), s)
+        for b in (1, 4):
+            ph = model.price_batch(m, n, s, batch=b)
+            for k in range(len(m)):
+                p1 = model.phases(int(m[k]), int(n[k]), s, batch=b)
+                assert ph.t_prefill[k] == p1.t_prefill
+                assert ph.t_decode[k] == p1.t_decode
+                assert ph.util_decode[k] == p1.util_decode
+
+
+# ------------------------------------------------- golden arrival samplers
+GOLDEN_HEADS = {
+    ("diurnal", 0): [0.4720913903985484, 0.47759324111773044,
+                     0.6310966298178072, 2.2632107198807887,
+                     4.8588166471964325],
+    ("diurnal", 1): [0.3837450473605064, 2.6492067718396726,
+                     2.8023793765129246, 2.8106331103913345,
+                     3.0228738131473483],
+    ("mmpp", 0): [1.8586341910257107, 2.107428378126808,
+                  2.2210521602320856, 2.3112512946211927,
+                  2.7161732145432023],
+    ("mmpp", 1): [1.5753148695915309, 2.304730832331034,
+                  2.6064773853587155, 2.822255536769585,
+                  2.9461258243397452],
+}
+
+
+@pytest.mark.parametrize("process,seed", sorted(GOLDEN_HEADS))
+def test_arrival_sampler_golden(process, seed):
+    """The vectorized arrival generators are pinned to exact float values:
+    both engines consume the same stream, so a sampler change would keep
+    the equivalence gate green while silently moving every benchmark."""
+    a = generate_arrivals(200, 2.0, seed=seed, process=process)
+    assert a[:5].tolist() == GOLDEN_HEADS[(process, seed)]
+
+
+# ------------------------------------------------------- percentile cache
+def test_latency_percentile_cache():
+    eff, perf = _systems()
+    qs = sample_workload(150, seed=2, spec=WorkloadSpec(rate_qps=5.0),
+                         arrival_process="mmpp")
+    pools = {"eff": PoolSpec(eff, 2, 2), "perf": PoolSpec(perf, 2, 4)}
+    r = simulate_fleet(CFG, qs, pools,
+                       CostOptimalScheduler(CFG, [eff, perf]))
+    lat = np.array(sorted(rec.t_done - rec.t_arrival for rec in r.records))
+    for p in (0.0, 10.0, 50.0, 90.0, 99.0, 100.0):
+        assert r.latency_percentile(p) == float(np.percentile(lat, p))
+    assert r.p50_latency_s == r.latency_percentile(50.0)
+    assert r.p99_latency_s == r.latency_percentile(99.0)
