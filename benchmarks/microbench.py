@@ -6,8 +6,9 @@ kernels with their analytic work counts attached — the measurement feed for
 from __future__ import annotations
 
 import functools
+import statistics
 import time
-from typing import List, Optional, Sequence
+from typing import Dict, List, Mapping, Optional, Sequence, Tuple
 
 import jax
 import jax.numpy as jnp
@@ -23,68 +24,75 @@ from repro.training import optimizer as OPT
 from repro.training.train import make_train_step
 
 
-def _bench(fn, *args, iters: int = 5):
-    fn(*args)  # compile
-    t0 = time.perf_counter()
-    for _ in range(iters):
-        out = fn(*args)
-    jax.block_until_ready(out)
-    return (time.perf_counter() - t0) / iters * 1e6
+def _time(fn, *args, iters: int = 5) -> Tuple[float, float]:
+    """(best seconds, noise_frac) per call, compile + warmup excluded.
+
+    Every timed repetition blocks on the result INSIDE its own timed region
+    (async dispatch would otherwise attribute one call's device time to a
+    later iteration). Best-of-k, not mean: shared-host scheduling noise is
+    strictly additive, so the minimum is the best estimator of the kernel's
+    own time. noise_frac = (median - best) / best is the spread the
+    calibration fit uses to down-weight noisy samples.
+    """
+    for _ in range(2):
+        jax.block_until_ready(fn(*args))  # compile + warmup
+    reps = []
+    for _ in range(max(1, iters)):
+        t0 = time.perf_counter()
+        jax.block_until_ready(fn(*args))
+        reps.append(time.perf_counter() - t0)
+    best = min(reps)
+    med = statistics.median(reps)
+    return best, (med - best) / best if best > 0 else 0.0
 
 
 def _time_s(fn, *args, iters: int = 5) -> float:
-    """Min wall seconds per call (compile + warmup excluded). Min, not mean:
-    shared-host scheduling noise is strictly additive, so the minimum is the
-    best estimator of the kernel's own time."""
-    for _ in range(2):
-        out = fn(*args)                   # compile + warmup
-    jax.block_until_ready(out)
-    best = float("inf")
-    for _ in range(iters):
-        t0 = time.perf_counter()
-        jax.block_until_ready(fn(*args))
-        best = min(best, time.perf_counter() - t0)
-    return best
+    """Best wall seconds per call (see ``_time``)."""
+    return _time(fn, *args, iters=iters)[0]
+
+
+def _bench(fn, *args, iters: int = 5):
+    """Best-of-k microseconds per call (same hygiene as ``_time``)."""
+    return _time(fn, *args, iters=iters)[0] * 1e6
 
 
 # ------------------------------------------------------- calibration samples
-def kernel_phase_samples(*, prefill_lens: Sequence[int] = (128, 256, 512, 1024),
-                         decode_ctxs: Sequence[int] = (128, 256, 512, 1024,
-                                                       2048, 4096),
-                         ssm_lens: Sequence[int] = (256, 512, 1024),
-                         batch: int = 1, heads: int = 4, kv_heads: int = 2,
-                         head_dim: int = 64, state_dim: int = 64,
-                         ssm_head_dim: int = 64, iters: int = 5,
-                         backend: Optional[str] = None,
-                         seed: int = 0) -> List[KernelSample]:
-    """Time the real kernels behind the serving stack and return samples the
-    roofline calibration can fit (``fit_calibration``).
+def time_kernel(kernel: str, shape: Mapping[str, int], *,
+                params: Optional[Mapping[str, object]] = None,
+                backend: Optional[str] = None, iters: int = 5, seed: int = 0,
+                heads: int = 4, kv_heads: int = 2, head_dim: int = 64,
+                state_dim: int = 64, ssm_head_dim: int = 64,
+                page_block: int = 16) -> KernelSample:
+    """Time ONE kernel cell through ``kernels.ops`` dispatch.
 
-    Kernels go through ``kernels.ops`` backend dispatch: compiled Pallas on
-    TPU, the structurally identical jnp path elsewhere — so the same command
-    calibrates whichever hardware it runs on. FLOPs/bytes are the kernel's
-    analytic work for the timed shape; ``ctx`` is the context length that
-    drives ``SystemProfile.sat_ctx`` degradation (0 for the SSD scan, whose
-    running state is constant-size).
+    ``kernel`` is one of "flash_attention" (shape {"s", ["b"]}),
+    "decode_attention" / "paged_decode_quant" (shape {"b", "c"}), or
+    "ssm_scan" (shape {"s", ["b"]}). ``params`` are the tile/impl kwargs to
+    pin for this measurement (the autotuner's candidate grid; None = the
+    dispatch defaults). Returns a ``KernelSample`` carrying the cell's
+    analytic work counts and the best-of-k time + noise — the unit the
+    autotuner (``kernels.autotune``) and ``kernel_phase_samples`` are built
+    on.
     """
     rng = np.random.default_rng(seed)
     bk = {"backend": backend} if backend else {}
+    p: Dict[str, object] = dict(params) if params else {}
     isz = 4  # float32
-    B, Hq, Hkv, Dh = batch, heads, kv_heads, head_dim
-    out: List[KernelSample] = []
+    Hq, Hkv, Dh = heads, kv_heads, head_dim
     # The jnp stand-in path (non-TPU hosts) materializes the (Sq, Sk) score
     # matrix that the fused Pallas kernel keeps in VMEM — count those bytes
     # when that is the variant actually being timed, so the fit targets the
     # measured kernel, not an idealized one.
     materializes_scores = ops.resolve_backend(backend or "auto") == "ref"
 
-    # ---- flash attention (prefill phase) ----
-    fa = jax.jit(functools.partial(ops.flash_attention, causal=True, **bk))
-    for S in prefill_lens:
+    if kernel == "flash_attention":
+        B, S = int(shape.get("b", 1)), int(shape["s"])
+        fa = jax.jit(functools.partial(ops.flash_attention, causal=True,
+                                       **p, **bk))
         q = jnp.asarray(rng.normal(size=(B, Hq, S, Dh)), jnp.float32)
         k = jnp.asarray(rng.normal(size=(B, Hkv, S, Dh)), jnp.float32)
         v = jnp.asarray(rng.normal(size=(B, Hkv, S, Dh)), jnp.float32)
-        t = _time_s(fa, q, k, v, iters=iters)
+        t, nf = _time(fa, q, k, v, iters=iters)
         if materializes_scores:
             # the jnp path computes the FULL unmasked S x S einsums and masks
             # afterward — no causal halving in executed FLOPs
@@ -94,37 +102,128 @@ def kernel_phase_samples(*, prefill_lens: Sequence[int] = (128, 256, 512, 1024),
         byts = isz * (2.0 * B * Hq * S * Dh + 2.0 * B * Hkv * S * Dh)
         if materializes_scores:
             byts += isz * 3.0 * B * Hq * S * S         # scores: write, softmax, read
-        out.append(KernelSample("flash_attention", flops, byts, float(S), t))
+        return KernelSample("flash_attention", flops, byts, float(S), t, nf)
 
-    # ---- decode attention (per-token decode phase) ----
-    da = jax.jit(functools.partial(ops.decode_attention, **bk))
-    for ctx in decode_ctxs:
+    if kernel == "decode_attention":
+        B, ctx = int(shape["b"]), int(shape["c"])
+        da = jax.jit(functools.partial(ops.decode_attention, **p, **bk))
         q = jnp.asarray(rng.normal(size=(B, Hq, 1, Dh)), jnp.float32)
         kc = jnp.asarray(rng.normal(size=(B, Hkv, ctx, Dh)), jnp.float32)
         vc = jnp.asarray(rng.normal(size=(B, Hkv, ctx, Dh)), jnp.float32)
         kv_len = jnp.full((B,), ctx, jnp.int32)
-        t = _time_s(da, q, kc, vc, kv_len, iters=iters)
+        t, nf = _time(da, q, kc, vc, kv_len, iters=iters)
         flops = 4.0 * B * Hq * ctx * Dh                # QK^T + PV at length ctx
         byts = isz * (2.0 * B * Hkv * ctx * Dh + 2.0 * B * Hq * Dh)
         if materializes_scores:
             byts += isz * 3.0 * B * Hq * ctx
-        out.append(KernelSample("decode_attention", flops, byts, float(ctx), t))
+        return KernelSample("decode_attention", flops, byts, float(ctx), t, nf)
 
-    # ---- SSD scan (SSM prefill phase) ----
-    H, P, N, chunk = heads, ssm_head_dim, state_dim, 128
-    ss = jax.jit(functools.partial(ops.ssd_scan, chunk=chunk, **bk))
-    for S in ssm_lens:
+    if kernel == "paged_decode_quant":
+        B, ctx = int(shape["b"]), int(shape["c"])
+        if ctx % page_block:
+            raise ValueError(f"ctx {ctx} not a multiple of page_block "
+                             f"{page_block}")
+        mb = ctx // page_block
+        nb = 1 + B * mb                                # block 0 = null block
+        pq = jax.jit(functools.partial(ops.paged_decode_attention_quant,
+                                       **p, **bk))
+        q = jnp.asarray(rng.normal(size=(B, Hq, 1, Dh)), jnp.float32)
+        kp = jnp.asarray(rng.integers(-127, 128, size=(nb, Hkv, page_block, Dh)),
+                         jnp.int8)
+        vp = jnp.asarray(rng.integers(-127, 128, size=(nb, Hkv, page_block, Dh)),
+                         jnp.int8)
+        ks = jnp.asarray(rng.uniform(0.005, 0.02,
+                                     size=(nb, Hkv, page_block, 1)), jnp.float32)
+        vs = jnp.asarray(rng.uniform(0.005, 0.02,
+                                     size=(nb, Hkv, page_block, 1)), jnp.float32)
+        tables = jnp.asarray(np.arange(1, 1 + B * mb).reshape(B, mb), jnp.int32)
+        kv_len = jnp.full((B,), ctx, jnp.int32)
+        t, nf = _time(pq, q, kp, vp, ks, vs, tables, kv_len, iters=iters)
+        # attention matmuls + the per-element dequantize multiplies
+        flops = 4.0 * B * Hq * ctx * Dh + 4.0 * B * Hkv * ctx * Dh
+        byts = (1.0 * 2.0 * B * Hkv * ctx * Dh        # int8 K/V pool reads
+                + isz * 2.0 * B * Hkv * ctx           # scale columns
+                + isz * 2.0 * B * Hq * Dh)            # q + out
+        if p.get("impl", "gather") == "gather":
+            # gather-dequantize materializes f32 copies of BOTH caches
+            # (write + re-read by the dense kernel)
+            byts += isz * 4.0 * B * Hkv * ctx * Dh
+        if materializes_scores:
+            byts += isz * 3.0 * B * Hq * ctx
+        return KernelSample("paged_decode_quant", flops, byts, float(ctx), t, nf)
+
+    if kernel == "ssm_scan":
+        B, S = int(shape.get("b", 1)), int(shape["s"])
+        H, P, N = heads, ssm_head_dim, state_dim
+        chunk = int(p.get("chunk", 128))               # executed-FLOPs driver
+        ss = jax.jit(functools.partial(ops.ssd_scan, chunk=chunk, **bk))
         x = jnp.asarray(rng.normal(size=(B, H, S, P)), jnp.float32)
         dt = jnp.asarray(rng.uniform(0.001, 0.2, size=(B, H, S)), jnp.float32)
         A = jnp.asarray(-rng.uniform(0.5, 4.0, size=(H,)), jnp.float32)
         Bm = jnp.asarray(rng.normal(size=(B, S, N)), jnp.float32)
         Cm = jnp.asarray(rng.normal(size=(B, S, N)), jnp.float32)
-        t = _time_s(ss, x, dt, A, Bm, Cm, iters=iters)
+        t, nf = _time(ss, x, dt, A, Bm, Cm, iters=iters)
         # chunked dual form: CB^T + att@x per chunk, C@state + state update
         flops = 2.0 * B * H * S * (chunk * N + chunk * P + 2.0 * N * P)
         byts = isz * (2.0 * B * H * S * P + 2.0 * B * S * N + B * H * S)
-        out.append(KernelSample("ssm_scan", flops, byts, 0.0, t))
+        return KernelSample("ssm_scan", flops, byts, 0.0, t, nf)
 
+    raise KeyError(f"unknown kernel {kernel!r}")
+
+
+def kernel_phase_samples(*, prefill_lens: Sequence[int] = (128, 256, 512, 1024),
+                         decode_ctxs: Sequence[int] = (128, 256, 512, 1024,
+                                                       2048, 4096),
+                         ssm_lens: Sequence[int] = (256, 512, 1024),
+                         paged_ctxs: Sequence[int] = (),
+                         batch: int = 1, heads: int = 4, kv_heads: int = 2,
+                         head_dim: int = 64, state_dim: int = 64,
+                         ssm_head_dim: int = 64, iters: int = 5,
+                         backend: Optional[str] = None,
+                         seed: int = 0, tuned=None) -> List[KernelSample]:
+    """Time the real kernels behind the serving stack and return samples the
+    roofline calibration can fit (``fit_calibration``).
+
+    Kernels go through ``kernels.ops`` backend dispatch: compiled Pallas on
+    TPU, the structurally identical jnp path elsewhere — so the same command
+    calibrates whichever hardware it runs on. FLOPs/bytes are the kernel's
+    analytic work for the timed shape; ``ctx`` is the context length that
+    drives ``SystemProfile.sat_ctx`` degradation (0 for the SSD scan, whose
+    running state is constant-size).
+
+    ``tuned`` (an ``autotune.AutotuneCache``) re-measures every cell with its
+    autotuned parameters pinned explicitly — the re-measurement feed for the
+    oracle-refresh parity gate. None keeps the dispatch defaults.
+    """
+    from repro.kernels import autotune as AT
+    b = ops.resolve_backend(backend or "auto")
+
+    def tuned_params(kernel: str, **dims) -> Optional[Dict[str, object]]:
+        if tuned is None:
+            return None
+        return tuned.resolve(kernel, b, AT.shape_bucket(kernel, **dims))
+
+    dims = dict(heads=heads, kv_heads=kv_heads, head_dim=head_dim,
+                state_dim=state_dim, ssm_head_dim=ssm_head_dim)
+    out: List[KernelSample] = []
+    for S in prefill_lens:
+        out.append(time_kernel("flash_attention", {"b": batch, "s": S},
+                               params=tuned_params("flash_attention", s=S),
+                               backend=backend, iters=iters, seed=seed, **dims))
+    for ctx in decode_ctxs:
+        out.append(time_kernel("decode_attention", {"b": batch, "c": ctx},
+                               params=tuned_params("decode_attention",
+                                                   b=batch, c=ctx),
+                               backend=backend, iters=iters, seed=seed, **dims))
+    for ctx in paged_ctxs:
+        out.append(time_kernel("paged_decode_quant", {"b": batch, "c": ctx},
+                               params=tuned_params("paged_decode_quant",
+                                                   b=batch, c=ctx),
+                               backend=backend, iters=iters, seed=seed, **dims))
+    for S in ssm_lens:
+        out.append(time_kernel("ssm_scan", {"b": batch, "s": S},
+                               params=tuned_params("ssm_scan", s=S),
+                               backend=backend, iters=iters, seed=seed, **dims))
     return out
 
 

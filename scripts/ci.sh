@@ -44,3 +44,10 @@ python benchmarks/fleet_bench.py --smoke
 # autoscaled fleet must strictly lower fleet J/token vs the static fleet at
 # equal-or-better SLO attainment.
 python benchmarks/autoscale_sweep.py --smoke
+
+# Kernel-autotune gate: a tiny grid search must round-trip the cache schema
+# (incl. the stale-env refusal), never pick a winner slower than the default
+# on the measured grid, and refresh the TableOracle within the measured
+# calibration tolerance; the tracked BENCH_kernels.json must be well-formed
+# with its >= 1.15x geomean speedup intact.
+python benchmarks/autotune_sweep.py --smoke

@@ -160,11 +160,39 @@ class TableOracle:
                                  else default_grid(), dtype=float)
         self._tables: Dict[Tuple[SystemProfile, int], PhaseTable] = {}
         self.version = 0        # bumped on mutation so CostModel memos refresh
+        self.calibration: Optional["Calibration"] = None  # set by from_autotune
 
     def add_table(self, system: SystemProfile, table: PhaseTable,
                   batch: int = 1) -> None:
         self._tables[(system, batch)] = table
         self.version += 1
+
+    @classmethod
+    def from_autotune(cls, cfg: ModelConfig, system: SystemProfile, cache, *,
+                      batch: int = 1,
+                      m_grid: Optional[Sequence[float]] = None,
+                      n_grid: Optional[Sequence[float]] = None,
+                      fit_sat_ctx: bool = True) -> "TableOracle":
+        """Rebuild the phase grids from autotuned kernel timings.
+
+        ``cache`` is anything with a ``tuned_samples() -> [KernelSample]``
+        method (``kernels.autotune.AutotuneCache``) or a plain sample
+        sequence. The tuned timings are fit to roofline constants
+        (``fit_calibration``, noise-weighted) and the (m, n) grid is built
+        eagerly from the resulting ``CalibratedOracle`` — so every scheduler
+        pricing through this oracle prices the kernels *as tuned*. The fit
+        is exposed as ``.calibration`` for CI gating (tuned-grid pricing
+        must stay within the calibration tolerance of re-measured tuned
+        kernels — see ``benchmarks/autotune_sweep.py``).
+        """
+        samples = (cache.tuned_samples() if hasattr(cache, "tuned_samples")
+                   else list(cache))
+        cal = fit_calibration(system, samples, fit_sat_ctx=fit_sat_ctx)
+        oracle = cls(cfg, CalibratedOracle([cal]), m_grid=m_grid,
+                     n_grid=n_grid)
+        oracle.add_table(system, oracle._build(system, batch), batch)
+        oracle.calibration = cal
+        return oracle
 
     def _build(self, system: SystemProfile, batch: int) -> PhaseTable:
         M, N = len(self.m_grid), len(self.n_grid)
@@ -215,11 +243,12 @@ class KernelSample:
     saturation degradation (0 for context-independent kernels such as the
     SSD scan, whose running state is constant-size).
     """
-    kernel: str                 # "flash_attention" | "decode_attention" | "ssm_scan"
+    kernel: str                 # "flash_attention" | "decode_attention" | ...
     flops: float
     bytes: float
     ctx: float
-    t_s: float                  # measured wall seconds
+    t_s: float                  # measured wall seconds (best-of-k)
+    noise_frac: float = 0.0     # (median - best) / best across the k reps
 
 
 @dataclass(frozen=True)
@@ -270,17 +299,29 @@ def fit_calibration(system: SystemProfile, samples: Sequence[KernelSample], *,
     coarse-to-fine log-grid search; ``overhead`` has a closed form given the
     rest (weighted least squares on relative error, clipped at >= 0). The
     objective is relative RMSE, so short and long kernels weigh equally.
+
+    Samples carrying measurement noise (``KernelSample.noise_frac`` from the
+    microbench best-of-k spread) are down-weighted in the search objective by
+    1/(1+noise)^2 — a noisy cell steers the fit less. The *reported*
+    ``fit_rel_rmse`` stays unweighted so recovery bounds keep their meaning
+    (and synthetic samples, noise 0, fit exactly as before).
     """
     if not samples:
         raise ValueError("need at least one KernelSample to calibrate")
     t = np.array([s.t_s for s in samples])
     if np.any(t <= 0):
         raise ValueError("measured times must be positive")
+    noise = np.array([max(0.0, getattr(s, "noise_frac", 0.0)) for s in samples])
+    wgt = 1.0 / (1.0 + noise) ** 2
 
     def overhead_for(ce: float, me: float, sat: Optional[float]) -> float:
         base = _predict(samples, system, ce, me, sat, 0.0)
-        w = 1.0 / t ** 2
+        w = wgt / t ** 2
         return float(max(0.0, np.sum(w * (t - base)) / np.sum(w)))
+
+    def weighted_err(pred: np.ndarray) -> float:
+        r2 = ((pred - t) / t) ** 2
+        return float(np.sqrt(np.sum(wgt * r2) / np.sum(wgt)))
 
     sat_grid: List[Optional[float]] = [None]
     if fit_sat_ctx:
@@ -294,7 +335,7 @@ def fit_calibration(system: SystemProfile, samples: Sequence[KernelSample], *,
             for me in me_grid:
                 for sat in sat_grid:
                     oh = overhead_for(ce, me, sat)
-                    err = _rel_rmse(_predict(samples, system, ce, me, sat, oh), t)
+                    err = weighted_err(_predict(samples, system, ce, me, sat, oh))
                     if err < best[0]:
                         best = (err, float(ce), float(me),
                                 None if sat is None else float(sat), oh)
@@ -305,7 +346,8 @@ def fit_calibration(system: SystemProfile, samples: Sequence[KernelSample], *,
         if fit_sat_ctx and sat0 is not None:
             sat_grid = [None] + list(np.geomspace(sat0 / 3, sat0 * 3, 9))
 
-    err, ce, me, sat, oh = best
+    _, ce, me, sat, oh = best
+    err = _rel_rmse(_predict(samples, system, ce, me, sat, oh), t)
     return Calibration(profile=system.name, compute_eff=ce, mem_eff=me,
                        sat_ctx=sat, overhead_s=oh, fit_rel_rmse=err,
                        n_samples=len(samples))

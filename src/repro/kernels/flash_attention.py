@@ -109,6 +109,10 @@ def flash_attention(q: jnp.ndarray, k: jnp.ndarray, v: jnp.ndarray, *,
     B, Hq, Sq, D = q.shape
     _, Hkv, Sk, _ = k.shape
     assert Hq % Hkv == 0, (Hq, Hkv)
+    for name, blk in (("block_q", block_q), ("block_k", block_k)):
+        if blk < 1 or (blk & (blk - 1)):
+            raise ValueError(f"{name} must be a positive power of two "
+                             f"(MXU-aligned grid), got {blk}")
     group = Hq // Hkv
     if sk_valid is None:
         sk_valid = Sk

@@ -241,17 +241,12 @@ def paged_decode_self_attention(params, cfg: ModelConfig, x, *, positions,
         v_pool = v_pool.at[block_ids, :, rows].set(vq)
         k_scale_pool = k_scale_pool.at[block_ids, :, rows].set(ks)
         v_scale_pool = v_scale_pool.at[block_ids, :, rows].set(vs)
-        # int8 pools: gather + dequantize, then the dense decode kernel (the
-        # paged kernel reads f32/bf16 pools only)
-        k_read = dequantize_kv(ref.gather_paged_kv(k_pool, block_tables),
-                               ref.gather_paged_kv(k_scale_pool, block_tables),
-                               q.dtype)
-        v_read = dequantize_kv(ref.gather_paged_kv(v_pool, block_tables),
-                               ref.gather_paged_kv(v_scale_pool, block_tables),
-                               q.dtype)
-        out = ops.decode_attention(q, k_read, v_read, kv_len, window=window,
-                                   softcap=cfg.attn_logit_softcap,
-                                   backend=backend)
+        # int8 pools: the quantized read path picks gather-dequantize vs the
+        # fused in-kernel int8 read (autotuned; default = historical gather)
+        out = ops.paged_decode_attention_quant(
+            q, k_pool, v_pool, k_scale_pool, v_scale_pool, block_tables,
+            kv_len, window=window, softcap=cfg.attn_logit_softcap,
+            backend=backend)
     else:
         k_pool = k_pool.at[block_ids, :, rows].set(krow.astype(k_pool.dtype))
         v_pool = v_pool.at[block_ids, :, rows].set(vrow.astype(v_pool.dtype))
