@@ -152,6 +152,30 @@ def time_kernel(kernel: str, shape: Mapping[str, int], *,
             byts += isz * 3.0 * B * Hq * ctx
         return KernelSample("paged_decode_quant", flops, byts, float(ctx), t, nf)
 
+    if kernel == "kv_migrate":
+        # Device-side KV-block migration (serving.batching.migrate_kv_blocks):
+        # gather `blocks` K/V blocks from a source paged pool, scatter them
+        # into a destination pool. Pure data movement — flops 0, so the
+        # sample constrains the calibration's effective memory bandwidth
+        # (mem_eff), which migration_seconds reads through oracle.resolve.
+        nblk = int(shape.get("blocks", shape.get("b", 8)))
+        nb = 1 + nblk                                  # block 0 = null block
+        sk = jnp.asarray(rng.normal(size=(nb, Hkv, page_block, Dh)), jnp.float32)
+        sv = jnp.asarray(rng.normal(size=(nb, Hkv, page_block, Dh)), jnp.float32)
+        dk = jnp.zeros_like(sk)
+        dv = jnp.zeros_like(sv)
+        ids = jnp.arange(1, 1 + nblk, dtype=jnp.int32)
+
+        @jax.jit
+        def mv(sk, sv, dk, dv, ids):
+            return dk.at[ids].set(sk[ids]), dv.at[ids].set(sv[ids])
+
+        t, nf = _time(mv, sk, sv, dk, dv, ids, iters=iters)
+        # K+V payload, read once from the source pool + written once into
+        # the destination pool
+        byts = isz * 2.0 * 2.0 * nblk * Hkv * page_block * Dh
+        return KernelSample("kv_migrate", 0.0, byts, 0.0, t, nf)
+
     if kernel == "ssm_scan":
         B, S = int(shape.get("b", 1)), int(shape["s"])
         H, P, N = heads, ssm_head_dim, state_dim
@@ -176,6 +200,7 @@ def kernel_phase_samples(*, prefill_lens: Sequence[int] = (128, 256, 512, 1024),
                                                        2048, 4096),
                          ssm_lens: Sequence[int] = (256, 512, 1024),
                          paged_ctxs: Sequence[int] = (),
+                         migrate_blocks: Sequence[int] = (),
                          batch: int = 1, heads: int = 4, kv_heads: int = 2,
                          head_dim: int = 64, state_dim: int = 64,
                          ssm_head_dim: int = 64, iters: int = 5,
@@ -219,6 +244,9 @@ def kernel_phase_samples(*, prefill_lens: Sequence[int] = (128, 256, 512, 1024),
         out.append(time_kernel("paged_decode_quant", {"b": batch, "c": ctx},
                                params=tuned_params("paged_decode_quant",
                                                    b=batch, c=ctx),
+                               backend=backend, iters=iters, seed=seed, **dims))
+    for nblk in migrate_blocks:
+        out.append(time_kernel("kv_migrate", {"blocks": nblk},
                                backend=backend, iters=iters, seed=seed, **dims))
     for S in ssm_lens:
         out.append(time_kernel("ssm_scan", {"b": batch, "s": S},

@@ -51,3 +51,11 @@ python benchmarks/autoscale_sweep.py --smoke
 # calibration tolerance; the tracked BENCH_kernels.json must be well-formed
 # with its >= 1.15x geomean speedup intact.
 python benchmarks/autotune_sweep.py --smoke
+
+# Disaggregation gate: on the prompt-heavy diurnal cell the disaggregated
+# policy must beat the best per-query policy by >= 3% fleet J/token at
+# equal-or-better p99 TTFT, both fleet engines must simulate splits
+# bit-for-bit, and a live router handoff (migrate_kv_blocks + adopt_lane)
+# must stay token-for-token identical to solo generation; the tracked
+# BENCH_disagg.json must be well-formed with its recorded gate intact.
+python benchmarks/disagg_sweep.py --smoke

@@ -119,9 +119,10 @@ _POWER_UNITS = {"w": 1.0, "watt": 1.0, "watts": 1.0, "kw": 1e3}
 _TOKEN_WORDS = {"tokens", "token", "toks"}
 _COUNT_WORDS = {"count", "counts", "len", "blocks", "slots", "instances",
                 "chips", "queries", "lanes", "steps", "iters", "ticks",
-                "wakes", "hits", "misses", "layers", "experts"}
-#: unit-bearing but outside the modeled algebra (rates etc.)
-_RATE_WORDS = {"qps", "hz", "rps"}
+                "wakes", "hits", "misses", "layers", "experts",
+                "bytes", "byte"}
+#: unit-bearing but outside the modeled algebra (rates, bandwidths etc.)
+_RATE_WORDS = {"qps", "hz", "rps", "gbps"}
 #: one-letter/short unit tokens need a preceding underscore to count
 _SHORT_UNITS = {"s", "j", "w", "ms", "us", "ns", "wh", "kw", "hr", "sec"}
 

@@ -16,7 +16,8 @@ from repro.core.workload import (Query, WorkloadSpec, sample_workload, alpaca_li
                                  poisson_arrivals, diurnal_arrivals,
                                  mmpp_arrivals, trace_arrivals)
 from repro.core.scheduler import (Scheduler, ThresholdScheduler, CostOptimalScheduler,
-                                  CapacityAwareScheduler, SingleSystemScheduler,
+                                  CapacityAwareScheduler, DisaggregatedScheduler,
+                                  SingleSystemScheduler,
                                   RoundRobinScheduler, Assignment,
                                   FleetState, PoolSnapshot)
 from repro.core.simulator import (simulate, summarize, threshold_sweep,

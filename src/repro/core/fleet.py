@@ -69,8 +69,15 @@ from repro.core.scheduler import (FleetState, PoolSnapshot, Scheduler,
 from repro.core.systems import SystemProfile
 from repro.core.workload import Query
 
-# event kinds: INSTANCE = batch-step/completion/wake/linger, CONTROL = autoscaler tick
-ARRIVAL, INSTANCE, CONTROL = 0, 1, 2
+# event kinds: INSTANCE = batch-step/completion/wake/linger, CONTROL =
+# autoscaler tick, MIGRATE = a disaggregated request's KV handoff landing on
+# its decode pool after the priced link transit time
+ARRIVAL, INSTANCE, CONTROL, MIGRATE = 0, 1, 2, 3
+
+# request roles inside a pool: a classic request runs both phases where it
+# lands (FULL); a split request runs prefill-only on its first pool (PF),
+# migrates its KV, then decode-only on its second pool (DEC)
+ROLE_FULL, ROLE_PF, ROLE_DEC = 0, 1, 2
 
 # instance power-machine states. AWAKE/WAKING draw idle power when unused;
 # SLEEP/OFF names match the profile's PowerStateTable rows.
@@ -113,6 +120,14 @@ class PoolSpec:
             return 0
         return kv_blocks_needed(q.m + q.n, self.block_size)
 
+    def blocks_needed_prefill(self, q: Query) -> int:
+        """Blocks a prefill-only (pre-handoff) residency holds: the prompt's
+        context, not the worst-case decoded context — the decode pool pays
+        for that after migration."""
+        if not self.kv_blocks:
+            return 0
+        return kv_blocks_needed(q.m, self.block_size)
+
 
 # --------------------------------------------------------------------- records
 @dataclass
@@ -125,6 +140,11 @@ class RequestRecord:
     t_decode: float = 0.0         # prefill done, decoding begins
     t_done: float = 0.0
     energy_j: float = 0.0
+    # disaggregated requests only: the pool that ran decode (``pool`` is then
+    # the prefill pool, which also carries the per-pool energy attribution),
+    # and the KV bytes the handoff moved over the inter-pool link
+    pool_decode: str = ""
+    mig_bytes: float = 0.0
 
     @property
     def wait_s(self) -> float:
@@ -169,7 +189,8 @@ class FleetSimResult:
                  _queries: Optional[Sequence[Query]] = None,
                  _pool_code: Optional[np.ndarray] = None,
                  _pool_names: Optional[Sequence[str]] = None,
-                 _arrays: Optional[Dict[str, np.ndarray]] = None):
+                 _arrays: Optional[Dict[str, np.ndarray]] = None,
+                 _pool2_code: Optional[np.ndarray] = None):
         self.policy = policy
         self.per_pool = per_pool
         self.horizon_s = horizon_s
@@ -178,32 +199,44 @@ class FleetSimResult:
         self._pool_code = _pool_code      # rid -> index into _pool_names
         self._pool_names = _pool_names
         self._arrays = _arrays            # rid-indexed t_*/energy arrays
+        self._pool2_code = _pool2_code    # rid -> decode pool (-1 = no split)
         self._sorted_latency_s: Optional[np.ndarray] = None
+        self._sorted_ttft_s: Optional[np.ndarray] = None
+        self._sorted_tpot_s: Optional[np.ndarray] = None
 
     @classmethod
     def from_arrays(cls, policy: str, queries: Sequence[Query],
                     pool_code: np.ndarray, pool_names: Sequence[str],
                     arrays: Dict[str, np.ndarray],
                     per_pool: Dict[str, PoolResult],
-                    horizon_s: float) -> "FleetSimResult":
+                    horizon_s: float,
+                    pool2_code: Optional[np.ndarray] = None) -> "FleetSimResult":
         """Array-backed result (vectorized engine): ``arrays`` holds
         ``t_arrival_s``/``t_start_s``/``t_decode_s``/``t_done_s``/``energy_j``
-        indexed by rid; ``pool_code[rid]`` indexes ``pool_names``."""
+        /``mig_bytes`` indexed by rid; ``pool_code[rid]`` indexes
+        ``pool_names`` (``pool2_code`` likewise for split requests' decode
+        pool, -1 where the request never split)."""
         return cls(policy, None, per_pool, horizon_s, _queries=queries,
                    _pool_code=pool_code, _pool_names=pool_names,
-                   _arrays=arrays)
+                   _arrays=arrays, _pool2_code=pool2_code)
 
     @property
     def records(self) -> List[RequestRecord]:
         if self._records is None:
             a = self._arrays
+            p2 = self._pool2_code
             self._records = [
                 RequestRecord(rid, q, self._pool_names[self._pool_code[rid]],
                               t_arrival=float(a["t_arrival_s"][rid]),
                               t_start=float(a["t_start_s"][rid]),
                               t_decode=float(a["t_decode_s"][rid]),
                               t_done=float(a["t_done_s"][rid]),
-                              energy_j=float(a["energy_j"][rid]))
+                              energy_j=float(a["energy_j"][rid]),
+                              pool_decode=(self._pool_names[p2[rid]]
+                                           if p2 is not None and p2[rid] >= 0
+                                           else ""),
+                              mig_bytes=float(a["mig_bytes"][rid])
+                              if "mig_bytes" in a else 0.0)
                 for rid, q in enumerate(self._queries)]
         return self._records
 
@@ -216,8 +249,14 @@ class FleetSimResult:
                 "t_decode_s": np.array([r.t_decode for r in recs]),
                 "t_done_s": np.array([r.t_done for r in recs]),
                 "energy_j": np.array([r.energy_j for r in recs]),
+                "mig_bytes": np.array([r.mig_bytes for r in recs]),
             }
         return self._arrays
+
+    def _out_tokens(self) -> np.ndarray:
+        if self._queries is not None:
+            return np.array([q.n for q in self._queries])
+        return np.array([r.query.n for r in self._records])
 
     def __len__(self) -> int:
         if self._queries is not None:
@@ -274,6 +313,32 @@ class FleetSimResult:
             self._sorted_latency_s = np.sort(a["t_done_s"] - a["t_arrival_s"])
         return float(np.percentile(self._sorted_latency_s, p))
 
+    def ttft_percentile(self, p: float) -> float:
+        """Time-to-first-token percentile: prefill completion minus arrival
+        (``t_decode_s`` is when decoding begins — for a split request, when
+        the prefill pool finished, so a handoff does not inflate TTFT)."""
+        if not len(self):
+            return 0.0
+        if self._sorted_ttft_s is None:
+            # sorted once per result, as latency_percentile does
+            a = self._metric_arrays()
+            self._sorted_ttft_s = np.sort(a["t_decode_s"] - a["t_arrival_s"])
+        return float(np.percentile(self._sorted_ttft_s, p))
+
+    def tpot_percentile(self, p: float) -> float:
+        """Time-per-output-token percentile: the decode span spread over the
+        request's output tokens. For a split request the span includes the
+        migration transit and the decode pool's queue — the handoff's
+        latency cost lands here, not in TTFT."""
+        if not len(self):
+            return 0.0
+        if self._sorted_tpot_s is None:
+            a = self._metric_arrays()
+            span_s = a["t_done_s"] - a["t_decode_s"]
+            self._sorted_tpot_s = np.sort(
+                span_s / np.maximum(1, self._out_tokens()))
+        return float(np.percentile(self._sorted_tpot_s, p))
+
     @property
     def p50_latency_s(self) -> float:
         return self.latency_percentile(50)
@@ -281,6 +346,17 @@ class FleetSimResult:
     @property
     def p99_latency_s(self) -> float:
         return self.latency_percentile(99)
+
+    @property
+    def p99_ttft_s(self) -> float:
+        return self.ttft_percentile(99)
+
+    @property
+    def mig_bytes(self) -> float:
+        """Total KV bytes moved by prefill->decode handoffs (0 when the
+        policy never split a request)."""
+        # sequential left-fold, as total_energy_j
+        return sum(self._metric_arrays()["mig_bytes"].tolist())
 
     @property
     def mean_wait_s(self) -> float:
@@ -299,7 +375,9 @@ class FleetSimResult:
             "fleet_j_per_token": self.fleet_j_per_token,
             "p50_latency_s": self.p50_latency_s,
             "p99_latency_s": self.p99_latency_s,
+            "p99_ttft_s": self.p99_ttft_s,
             "mean_wait_s": self.mean_wait_s,
+            "mig_bytes": self.mig_bytes,
             "horizon_s": self.horizon_s,
         }
         for n, p in self.per_pool.items():
@@ -360,17 +438,26 @@ class QueueDepthAutoscaler(AutoscalerPolicy):
 class _Resident:
     """A request occupying one slot (and its KV blocks) of an instance."""
     __slots__ = ("rec", "phases1", "rem_tokens", "prefill_end", "_t_tok",
-                 "blocks")
+                 "blocks", "role")
 
     def __init__(self, model: CostModel, rec: RequestRecord, s: SystemProfile,
-                 now: float, blocks: int = 0):
+                 now: float, blocks: int = 0, role: int = ROLE_FULL):
         self.rec = rec
+        self.role = role
         q = rec.query
         self.phases1 = model.phases(q.m, q.n, s, batch=1)
         # overhead + per-request prefill run before the resident joins the
         # decode group (ContinuousBatcher: prefill per-request, decode batched)
         self.prefill_end = now + self.phases1.t_overhead + self.phases1.t_prefill
         self.rem_tokens = float(q.n)
+        if role == ROLE_PF:
+            # prefill-only residency: completes at prefill_end, the output
+            # tokens decode elsewhere after the KV handoff
+            self.rem_tokens = 0.0
+        elif role == ROLE_DEC:
+            # decode-only residency: prefill already ran on the source pool,
+            # so no prefill window (and no prefill energy) accrues here
+            self.prefill_end = now
         self.blocks = blocks
         self._t_tok: Dict[int, Tuple[float, float]] = {}
 
@@ -534,8 +621,8 @@ class _PoolRuntime:
         self.target_awake: Optional[int] = None   # autoscaler's current target
         self.instances = [_Instance(self, i, spec.slots)
                           for i in range(spec.instances)]
-        # heap of (priority, seq, record, batch=1 service time)
-        self.queue: List[Tuple[float, int, RequestRecord, float]] = []
+        # heap of (priority, seq, record, batch=1 service time, role)
+        self.queue: List[Tuple[float, int, RequestRecord, float, int]] = []
         self.queued_service_s = 0.0      # running sum of queued service times
         self.result = PoolResult()
 
@@ -560,14 +647,14 @@ class _PoolRuntime:
         return min(cands) if cands else 0.0
 
     def enqueue(self, key: float, seqno: int, rec: RequestRecord,
-                service_s: float) -> None:
-        heapq.heappush(self.queue, (key, seqno, rec, service_s))
+                service_s: float, role: int = ROLE_FULL) -> None:
+        heapq.heappush(self.queue, (key, seqno, rec, service_s, role))
         self.queued_service_s += service_s
 
-    def dequeue(self) -> RequestRecord:
-        _, _, rec, service_s = heapq.heappop(self.queue)
+    def dequeue(self) -> Tuple[RequestRecord, int]:
+        _, _, rec, service_s, role = heapq.heappop(self.queue)
         self.queued_service_s -= service_s
-        return rec
+        return rec, role
 
     def snapshot(self, model: CostModel, now: float) -> PoolSnapshot:
         busy = sum(len(i.residents) for i in self.instances)
@@ -699,19 +786,27 @@ class FleetSimulator:
             if kind == ARRIVAL:
                 self._arrivals_left -= 1
                 rid, q = payload
-                pool = self._dispatch(q, t)
-                need = pool.spec.blocks_needed(q)
-                if need > pool.spec.kv_blocks > 0:
-                    raise ValueError(
-                        f"query (m={q.m}, n={q.n}) needs {need} KV blocks but "
-                        f"pool {pool.name!r} instances hold only "
-                        f"{pool.spec.kv_blocks}: it can never be admitted")
-                rec = RequestRecord(rid, q, pool.name, t_arrival=t)
+                target = self._dispatch(q, t)
+                if isinstance(target, tuple):       # split: prefill here...
+                    pool, dst = target
+                    self._check_admissible(pool,
+                                           pool.spec.blocks_needed_prefill(q),
+                                           q)
+                    self._check_admissible(dst, dst.spec.blocks_needed(q), q)
+                    rec = RequestRecord(rid, q, pool.name, t_arrival=t,
+                                        pool_decode=dst.name)
+                    svc = model.split_runtime(q.m, q.n, pool.spec.system)[0]
+                    role = ROLE_PF
+                else:
+                    pool = target
+                    self._check_admissible(pool, pool.spec.blocks_needed(q), q)
+                    rec = RequestRecord(rid, q, pool.name, t_arrival=t)
+                    svc = model.runtime(q.m, q.n, pool.spec.system)
+                    role = ROLE_FULL
                 records.append(rec)
                 pool.result.queries += 1
-                svc = model.runtime(q.m, q.n, pool.spec.system)
                 key = svc if self.queue_discipline == "sjf" else t
-                pool.enqueue(key, next(seq), rec, svc)
+                pool.enqueue(key, next(seq), rec, svc, role)
                 self._refill(pool, t, events, seq)
             elif kind == INSTANCE:                  # batch-step/wake/linger
                 inst, version = payload
@@ -720,10 +815,18 @@ class FleetSimulator:
                 inst.advance(model, t)
                 if inst.state == WAKING and t >= inst.wake_done - 1e-12:
                     inst.finish_wake(t)
-                self._complete(inst, t)
+                self._complete(inst, t, events, seq)
                 self._refill(inst.pool, t, events, seq)
                 self._maybe_descend(inst, t)
                 self._reschedule(inst, t, events, seq)
+            elif kind == MIGRATE:                   # ...decode there
+                rec = payload
+                pool = self.pools[rec.pool_decode]
+                q = rec.query
+                svc = model.split_runtime(q.m, q.n, pool.spec.system)[1]
+                key = svc if self.queue_discipline == "sjf" else t
+                pool.enqueue(key, next(seq), rec, svc, ROLE_DEC)
+                self._refill(pool, t, events, seq)
             else:                                   # CONTROL autoscaler tick
                 self._control(self.pools[payload], t, events, seq)
 
@@ -736,21 +839,70 @@ class FleetSimulator:
                           pools={n: p.snapshot(self.model, now)
                                  for n, p in self.pools.items()})
 
-    def _dispatch(self, q: Query, now: float) -> _PoolRuntime:
+    def _dispatch(self, q: Query, now: float):
+        """Route one arrival: a ``_PoolRuntime`` for a whole-query decision,
+        or a (prefill pool, decode pool) tuple when the policy split the
+        phases (``DisaggregatedScheduler``). A tuple for a zero-decode query
+        degrades to the prefill pool — there is nothing to hand off."""
         s = self.scheduler.dispatch(q, self._fleet_state(now))
+        if isinstance(s, tuple):
+            a, b = s
+            if q.n <= 0:
+                s = a
+            else:
+                names = [self._by_system.get(x.name) for x in (a, b)]
+                for x, name in zip((a, b), names):
+                    if name is None:
+                        raise KeyError("scheduler dispatched to unknown "
+                                       f"system {x.name!r}")
+                self.scheduler.observe(q, (a, b))
+                return self.pools[names[0]], self.pools[names[1]]
         name = self._by_system.get(s.name)
         if name is None:
             raise KeyError(f"scheduler dispatched to unknown system {s.name!r}")
         self.scheduler.observe(q, s)
         return self.pools[name]
 
-    def _complete(self, inst: _Instance, now: float) -> None:
+    @staticmethod
+    def _check_admissible(pool: _PoolRuntime, need: int, q: Query) -> None:
+        if need > pool.spec.kv_blocks > 0:
+            raise ValueError(
+                f"query (m={q.m}, n={q.n}) needs {need} KV blocks but "
+                f"pool {pool.name!r} instances hold only "
+                f"{pool.spec.kv_blocks}: it can never be admitted")
+
+    def _complete(self, inst: _Instance, now: float, events, seq) -> None:
         done = inst.pop_finished(now)
         for r in done:
-            r.rec.t_done = now
-            self._horizon = max(self._horizon, now)
+            if r.role == ROLE_PF:
+                self._handoff(r.rec, inst.pool, now, events, seq)
+            else:
+                r.rec.t_done = now
+                self._horizon = max(self._horizon, now)
         if done and not inst.residents:
             inst.empty_since = now      # linger clock starts on drain
+
+    def _handoff(self, rec: RequestRecord, src: _PoolRuntime, now: float,
+                 events, seq) -> None:
+        """Prefill finished on the source pool: price the KV-block migration
+        (one scalar ``migration_terms`` call — the seam shared with the
+        scheduler and the vectorized engine), charge its energy to the
+        request, and deliver it to the decode pool's queue after the link
+        transit time via a MIGRATE event."""
+        q = rec.query
+        spec = src.spec
+        bs = spec.block_size if spec.kv_blocks else 0
+        dst = self.pools[rec.pool_decode]
+        nbytes, t_mig, e_mig = self.model.migration_terms(
+            q.m, spec.system, dst.spec.system, block_size=bs)
+        if not math.isfinite(t_mig):
+            raise ValueError(
+                f"split request {rec.rid} has no migration path from "
+                f"{spec.system.name!r} to {dst.spec.system.name!r} "
+                "(link_bw_gbps <= 0 on an endpoint)")
+        rec.energy_j += e_mig
+        rec.mig_bytes = nbytes
+        heapq.heappush(events, (now + t_mig, next(seq), MIGRATE, rec))
 
     def _refill(self, pool: _PoolRuntime, now: float, events, seq) -> None:
         """Admit queued requests into free slots (least-loaded awake
@@ -766,7 +918,10 @@ class FleetSimulator:
         the same tick; if the pool is still stuck, sleeping instances are
         demand-woken to cover the queue."""
         while pool.queue:
-            need = pool.spec.blocks_needed(pool.queue[0][2].query)
+            head_rec, head_role = pool.queue[0][2], pool.queue[0][4]
+            need = (pool.spec.blocks_needed_prefill(head_rec.query)
+                    if head_role == ROLE_PF
+                    else pool.spec.blocks_needed(head_rec.query))
             ready = [i for i in pool.instances
                      if i.state == AWAKE and i.free_slots > 0 and i.fits(need)]
             if not ready:
@@ -775,12 +930,14 @@ class FleetSimulator:
                 self._demand_wake(pool, now, events, seq)
                 break
             inst = min(ready, key=lambda i: len(i.residents))
-            rec = pool.dequeue()
+            rec, role = pool.dequeue()
             inst.advance(self.model, now)
-            self._complete(inst, now)
-            res = _Resident(self.model, rec, pool.spec.system, now, need)
-            rec.t_start = now
-            rec.t_decode = res.prefill_end
+            self._complete(inst, now, events, seq)
+            res = _Resident(self.model, rec, pool.spec.system, now, need,
+                            role=role)
+            if role != ROLE_DEC:        # a DEC admission keeps the original
+                rec.t_start = now       # queue-wait and TTFT anchors from
+                rec.t_decode = res.prefill_end      # the prefill pool
             inst.residents.append(res)
             inst.blocks_in_use += need
             pool.result.peak_residents = max(
@@ -802,7 +959,7 @@ class FleetSimulator:
                 continue
             before = (len(i.residents), i.blocks_in_use)
             i.advance(self.model, now)
-            self._complete(i, now)
+            self._complete(i, now, events, seq)
             if (len(i.residents), i.blocks_in_use) != before:
                 self._reschedule(i, now, events, seq)
                 freed = True

@@ -37,9 +37,10 @@ from typing import Dict, List, Optional, Sequence, Tuple, Union
 import numpy as np
 
 from repro.configs.base import ModelConfig
-from repro.core.fleet import (ARRIVAL, AWAKE, CONTROL, INSTANCE, OFF, SLEEP,
-                              WAKING, AutoscalerPolicy, FleetSimResult,
-                              PoolResult, PoolSpec)
+from repro.core.fleet import (ARRIVAL, AWAKE, CONTROL, INSTANCE, MIGRATE, OFF,
+                              ROLE_DEC, ROLE_FULL, ROLE_PF, SLEEP, WAKING,
+                              AutoscalerPolicy, FleetSimResult, PoolResult,
+                              PoolSpec)
 from repro.core.pricing import AnalyticOracle, CostModel
 from repro.core.scheduler import FleetState, PoolSnapshot, Scheduler
 from repro.core.workload import Query
@@ -90,8 +91,10 @@ class _VecPool:
         self.r_p_w = np.zeros((n_inst, slots))           # decode power at r_b
         self.r_b = np.zeros((n_inst, slots), np.int64)   # occupancy of cache
         self.r_blocks = np.zeros((n_inst, slots), np.int64)
+        self.r_role = np.zeros((n_inst, slots), np.int8)  # ROLE_FULL/_PF/_DEC
         # ---- queue + counters ----
-        self.queue: List[Tuple[float, int, int, float]] = []   # (key, seq, rid, svc)
+        # (key, seq, rid, svc, role)
+        self.queue: List[Tuple[float, int, int, float, int]] = []
         self.queued_service_s = 0.0
         self.busy = 0                                    # total residents
         # O(1) power-state census, maintained at every transition; residents
@@ -104,8 +107,11 @@ class _VecPool:
         self.svc_s: Optional[np.ndarray] = None          # batch=1 runtime
         self.pf_s: Optional[np.ndarray] = None           # t_prefill
         self.ov_s: Optional[np.ndarray] = None           # t_overhead
+        self.dec_s: Optional[np.ndarray] = None          # t_decode (DEC svc)
+        self.svc_pf_s: Optional[np.ndarray] = None       # overhead + prefill
         self.prefill_power_w: Optional[np.ndarray] = None
         self.blocks_need: Optional[np.ndarray] = None
+        self.blocks_need_pf: Optional[np.ndarray] = None  # prefill-only need
         # lazy per-occupancy decode tables: batch size b -> rid-indexed
         # (seconds/token, decode utilization) arrays, one price_batch per b
         self.t_tok_by_b: Dict[int, np.ndarray] = {}
@@ -170,6 +176,8 @@ class VectorizedFleetSimulator:
         self.t_done_s = np.zeros(n_req)
         self.energy_j = np.zeros(n_req)
         self.pool_code = np.full(n_req, -1, np.int16)
+        self.pool2_code = np.full(n_req, -1, np.int16)   # decode pool (split)
+        self.mig_bytes = np.zeros(n_req)
         self._n_tok_f = self.n_tok.astype(np.float64)
 
         # ---- batched pricing: one price_batch per pool over every rid ----
@@ -248,12 +256,21 @@ class VectorizedFleetSimulator:
                 if pool.n_waking and pool.state[i] == _WAKING \
                         and t >= pool.wake_done_s[i] - 1e-12:
                     self._finish_wake(pool, i, t)
-                self._advance_complete_row(pool, i, t)
+                self._advance_complete_row(pool, i, t, events, seq)
                 if pool.queue:
                     self._refill(pool, t, events, seq)
                 if pool.power_managed:
                     self._maybe_descend(pool, i, t)
                 self._reschedule(pool, i, t, events, seq)
+            elif kind == MIGRATE:                        # KV handoff landed
+                rid = payload
+                pool = self._pool_list[self.pool2_code[rid]]
+                svc_s = float(pool.dec_s[rid])
+                key = svc_s if self.queue_discipline == "sjf" else t
+                heapq.heappush(pool.queue,
+                               (key, next(seq), rid, svc_s, ROLE_DEC))
+                pool.queued_service_s += svc_s
+                self._refill(pool, t, events, seq)
             else:                                        # CONTROL tick
                 self._control(self.pools[payload], t, events, seq)
 
@@ -266,12 +283,18 @@ class VectorizedFleetSimulator:
         if n_req == 0:
             zero = np.zeros(0)
             pool.svc_s = pool.pf_s = pool.ov_s = pool.prefill_power_w = zero
+            pool.dec_s = pool.svc_pf_s = zero
             pool.blocks_need = np.zeros(0, np.int64)
+            pool.blocks_need_pf = np.zeros(0, np.int64)
             return
         ph = self.model.price_batch(self.m_tok, self.n_tok, s, batch=1)
         pool.pf_s = ph.t_prefill
         pool.ov_s = ph.t_overhead
         pool.svc_s = (ph.t_prefill + ph.t_decode) + ph.t_overhead
+        # split-phase service times, associated exactly as the scalar
+        # CostModel.split_runtime the event engine prices queue entries with
+        pool.dec_s = ph.t_decode
+        pool.svc_pf_s = ph.t_overhead + ph.t_prefill
         # blended overhead+prefill power (same expression as _Instance.advance)
         u = np.minimum(np.maximum(ph.util_prefill, 0.0), 1.0)
         p_pf_w = s.chips * (s.power_idle_w
@@ -283,33 +306,48 @@ class VectorizedFleetSimulator:
         if spec.kv_blocks:
             tokens = self.m_tok + self.n_tok
             pool.blocks_need = -(-tokens // spec.block_size)
+            pool.blocks_need_pf = -(-self.m_tok // spec.block_size)
         else:
             pool.blocks_need = np.zeros(n_req, np.int64)
+            pool.blocks_need_pf = np.zeros(n_req, np.int64)
 
     # --------------------------------------------------------------- arrival
     def _arrival(self, rid: int, t: float, events, seq) -> None:
         q = self._queries[rid]
-        pool = self._dispatch(q, rid, t)
-        need = int(pool.blocks_need[rid])
+        target = self._dispatch(q, rid, t)
+        if isinstance(target, tuple):            # split: prefill here...
+            pool, dst = target
+            self._check_admissible(pool, int(pool.blocks_need_pf[rid]), q)
+            self._check_admissible(dst, int(dst.blocks_need[rid]), q)
+            self.pool2_code[rid] = dst.idx
+            svc_s = float(pool.svc_pf_s[rid])
+            role = ROLE_PF
+        else:
+            pool = target
+            self._check_admissible(pool, int(pool.blocks_need[rid]), q)
+            svc_s = float(pool.svc_s[rid])
+            role = ROLE_FULL
+        self.pool_code[rid] = pool.idx
+        pool.result.queries += 1
+        key = svc_s if self.queue_discipline == "sjf" else t
+        heapq.heappush(pool.queue, (key, next(seq), rid, svc_s, role))
+        pool.queued_service_s += svc_s
+        self._refill(pool, t, events, seq)
+
+    @staticmethod
+    def _check_admissible(pool: _VecPool, need: int, q: Query) -> None:
         if need > pool.spec.kv_blocks > 0:
             raise ValueError(
                 f"query (m={q.m}, n={q.n}) needs {need} KV blocks but "
                 f"pool {pool.name!r} instances hold only "
                 f"{pool.spec.kv_blocks}: it can never be admitted")
-        self.pool_code[rid] = pool.idx
-        pool.result.queries += 1
-        svc_s = float(pool.svc_s[rid])
-        key = svc_s if self.queue_discipline == "sjf" else t
-        heapq.heappush(pool.queue, (key, next(seq), rid, svc_s))
-        pool.queued_service_s += svc_s
-        self._refill(pool, t, events, seq)
 
     def _fleet_state(self, now: float) -> FleetState:
         return FleetState(time_s=now,
                           pools={p.name: self._snapshot(p, now)
                                  for p in self._pool_list})
 
-    def _dispatch(self, q: Query, rid: int, now: float) -> _VecPool:
+    def _dispatch(self, q: Query, rid: int, now: float):
         if self._pre_pool is not None:
             return self._pool_list[self._pre_pool[rid]]
         if self._base_dispatch:
@@ -320,6 +358,21 @@ class VectorizedFleetSimulator:
             s = self._rid_dispatch(rid, q, self._fleet_state(now))
         else:
             s = self.scheduler.dispatch(q, self._fleet_state(now))
+        if isinstance(s, tuple):        # split decision (see fleet._dispatch)
+            a, b = s
+            if q.n <= 0:
+                s = a
+            else:
+                names = [self._by_system.get(x.name) for x in (a, b)]
+                for x, name in zip((a, b), names):
+                    if name is None:
+                        raise KeyError("scheduler dispatched to unknown "
+                                       f"system {x.name!r}")
+                if self._rid_observe is not None:
+                    self._rid_observe(rid, q, (a, b))
+                else:
+                    self.scheduler.observe(q, (a, b))
+                return self.pools[names[0]], self.pools[names[1]]
         name = self._by_system.get(s.name)
         if name is None:
             raise KeyError(f"scheduler dispatched to unknown system {s.name!r}")
@@ -547,8 +600,8 @@ class VectorizedFleetSimulator:
                 inc_pf_j = span[hot] * pool.prefill_power_w[rids[hot]]
                 np.add.at(self.energy_j, rids[hot], inc_pf_j)
 
-    def _advance_complete_row(self, pool: _VecPool, i: int,
-                              now: float) -> bool:
+    def _advance_complete_row(self, pool: _VecPool, i: int, now: float,
+                              events, seq) -> bool:
         """``_advance_row`` followed by ``_complete_row``, sharing one read
         of the resident rows (the hot per-event path; same float ops)."""
         t0 = float(pool.last_t_s[i])
@@ -609,29 +662,11 @@ class VectorizedFleetSimulator:
                 if rems[k] <= 1e-6 and pf[k] <= thr]
         if not done:
             return False
-        for k in done:
-            rid = int(pool.r_rid[i, k])
-            self.t_done_s[rid] = now
-            self._horizon_s = max(self._horizon_s, now)
-            pool.blocks_in_use[i] -= pool.r_blocks[i, k]
-        keep = [k for k in range(nr) if k not in done]
-        for dst, src in enumerate(keep):
-            if dst != src:
-                pool.r_rid[i, dst] = pool.r_rid[i, src]
-                pool.r_rem[i, dst] = pool.r_rem[i, src]
-                pool.r_pf_end_s[i, dst] = pool.r_pf_end_s[i, src]
-                pool.r_t_tok[i, dst] = pool.r_t_tok[i, src]
-                pool.r_p_w[i, dst] = pool.r_p_w[i, src]
-                pool.r_b[i, dst] = pool.r_b[i, src]
-                pool.r_blocks[i, dst] = pool.r_blocks[i, src]
-        pool.r_rid[i, len(keep):nr] = -1
-        pool.n_res[i] = len(keep)
-        pool.busy -= len(done)
-        if not keep:
-            pool.empty_since_s[i] = now        # linger clock starts on drain
+        self._pop_done(pool, i, nr, done, now, events, seq)
         return True
 
-    def _complete_row(self, pool: _VecPool, i: int, now: float) -> bool:
+    def _complete_row(self, pool: _VecPool, i: int, now: float,
+                      events, seq) -> bool:
         """``pop_finished`` + ``_complete`` for one instance; True if any
         resident finished (slots/blocks freed)."""
         nr = int(pool.n_res[i])
@@ -644,10 +679,22 @@ class VectorizedFleetSimulator:
                 if rem[k] <= 1e-6 and pf[k] <= thr]
         if not done:
             return False
+        self._pop_done(pool, i, nr, done, now, events, seq)
+        return True
+
+    def _pop_done(self, pool: _VecPool, i: int, nr: int, done: List[int],
+                  now: float, events, seq) -> None:
+        """Finish the ``done`` slots of one instance row and compact it —
+        the shared tail of both completion paths (reference: the ``done``
+        loop in ``fleet.FleetSimulator._complete`` + ``pop_finished``'s
+        removal). Prefill-only residents hand off instead of finishing."""
         for k in done:
             rid = int(pool.r_rid[i, k])
-            self.t_done_s[rid] = now
-            self._horizon_s = max(self._horizon_s, now)
+            if pool.r_role[i, k] == ROLE_PF:
+                self._handoff(rid, pool, now, events, seq)
+            else:
+                self.t_done_s[rid] = now
+                self._horizon_s = max(self._horizon_s, now)
             pool.blocks_in_use[i] -= pool.r_blocks[i, k]
         keep = [k for k in range(nr) if k not in done]
         for dst, src in enumerate(keep):
@@ -659,12 +706,32 @@ class VectorizedFleetSimulator:
                 pool.r_p_w[i, dst] = pool.r_p_w[i, src]
                 pool.r_b[i, dst] = pool.r_b[i, src]
                 pool.r_blocks[i, dst] = pool.r_blocks[i, src]
+                pool.r_role[i, dst] = pool.r_role[i, src]
         pool.r_rid[i, len(keep):nr] = -1
         pool.n_res[i] = len(keep)
         pool.busy -= len(done)
         if not keep:
             pool.empty_since_s[i] = now        # linger clock starts on drain
-        return True
+
+    def _handoff(self, rid: int, src: _VecPool, now: float,
+                 events, seq) -> None:
+        """Transcribed ``FleetSimulator._handoff``: the SAME scalar
+        ``migration_terms`` call, so the priced bytes/seconds/joules are
+        bit-identical between engines."""
+        q = self._queries[rid]
+        spec = src.spec
+        bs = spec.block_size if spec.kv_blocks else 0
+        dst = self._pool_list[self.pool2_code[rid]]
+        nbytes, t_mig, e_mig = self.model.migration_terms(
+            q.m, spec.system, dst.spec.system, block_size=bs)
+        if not math.isfinite(t_mig):
+            raise ValueError(
+                f"split request {rid} has no migration path from "
+                f"{spec.system.name!r} to {dst.spec.system.name!r} "
+                "(link_bw_gbps <= 0 on an endpoint)")
+        self.energy_j[rid] += e_mig
+        self.mig_bytes[rid] = nbytes
+        heapq.heappush(events, (now + t_mig, next(seq), MIGRATE, rid))
 
     def _refill(self, pool: _VecPool, now: float, events, seq) -> None:
         """Transcribed ``FleetSimulator._refill``: admit queue head to the
@@ -673,8 +740,9 @@ class VectorizedFleetSimulator:
         spec = pool.spec
         kv = spec.kv_blocks
         while pool.queue:
-            head_rid = pool.queue[0][2]
-            need = int(pool.blocks_need[head_rid])
+            head_rid, head_role = pool.queue[0][2], pool.queue[0][4]
+            need = int((pool.blocks_need_pf if head_role == ROLE_PF
+                        else pool.blocks_need)[head_rid])
             if pool.n_awake * spec.slots - pool.busy <= 0:
                 i = -1              # no awake slot free: provably stuck
             elif not kv and pool.n_awake == pool.n_inst:
@@ -696,18 +764,27 @@ class VectorizedFleetSimulator:
                     continue        # freed capacity: re-evaluate the head
                 self._demand_wake(pool, now, events, seq)
                 break
-            key, _, rid, svc_s = heapq.heappop(pool.queue)
+            key, _, rid, svc_s, role = heapq.heappop(pool.queue)
             pool.queued_service_s -= svc_s
-            self._advance_complete_row(pool, i, now)
+            self._advance_complete_row(pool, i, now, events, seq)
             slot = int(pool.n_res[i])
             pool.r_rid[i, slot] = rid
-            pool.r_rem[i, slot] = float(self._n_tok_f[rid])
-            pf_end_s = (now + float(pool.ov_s[rid])) + float(pool.pf_s[rid])
+            pool.r_role[i, slot] = role
+            if role == ROLE_PF:     # twin of _Resident's role branches
+                pool.r_rem[i, slot] = 0.0
+                pf_end_s = (now + float(pool.ov_s[rid])) + float(pool.pf_s[rid])
+            elif role == ROLE_DEC:
+                pool.r_rem[i, slot] = float(self._n_tok_f[rid])
+                pf_end_s = now
+            else:
+                pool.r_rem[i, slot] = float(self._n_tok_f[rid])
+                pf_end_s = (now + float(pool.ov_s[rid])) + float(pool.pf_s[rid])
             pool.r_pf_end_s[i, slot] = pf_end_s
             pool.r_b[i, slot] = -1              # t_tok not yet priced
             pool.r_blocks[i, slot] = need
-            self.t_start_s[rid] = now
-            self.t_decode_s[rid] = pf_end_s
+            if role != ROLE_DEC:    # DEC keeps the prefill pool's anchors
+                self.t_start_s[rid] = now
+                self.t_decode_s[rid] = pf_end_s
             pool.n_res[i] += 1
             pool.blocks_in_use[i] += need
             pool.busy += 1
@@ -730,7 +807,7 @@ class VectorizedFleetSimulator:
                 self._advance_row(pool, int(i), now)
         freed = False
         for i in idx:
-            if self._complete_row(pool, int(i), now):
+            if self._complete_row(pool, int(i), now, events, seq):
                 self._reschedule(pool, int(i), now, events, seq)
                 freed = True
         return freed
@@ -912,10 +989,11 @@ class VectorizedFleetSimulator:
             per_pool[pool.name] = pool.result
         arrays = {"t_arrival_s": self.t_arrival_s, "t_start_s": self.t_start_s,
                   "t_decode_s": self.t_decode_s, "t_done_s": self.t_done_s,
-                  "energy_j": self.energy_j}
+                  "energy_j": self.energy_j, "mig_bytes": self.mig_bytes}
         return FleetSimResult.from_arrays(
             policy, self._queries, self.pool_code,
-            [p.name for p in self._pool_list], arrays, per_pool, horizon_s)
+            [p.name for p in self._pool_list], arrays, per_pool, horizon_s,
+            pool2_code=self.pool2_code)
 
     def _integrate_power(self, pool: _VecPool, horizon_s: float) -> None:
         """Transcription of ``FleetSimulator._integrate_power`` over the

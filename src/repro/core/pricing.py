@@ -417,6 +417,21 @@ class CalibratedOracle:
         return f"CalibratedOracle(profiles={sorted(self.calibrations)})"
 
 
+# ------------------------------------------------------------- kv migration
+def kv_bytes_per_token(cfg: ModelConfig, dtype_bytes: float = 4.0) -> float:
+    """Resident KV-cache footprint per token in the paged serving pools.
+
+    This is the *stored* state a disaggregated handoff must move (K and V for
+    every layer at the pool dtype — float32 by default, matching
+    ``models.model.init_paged_cache``), not the per-token *read* traffic of
+    ``perf_model.kv_bytes_per_token_ctx``. Attention-free stacks keep a
+    constant-size SSM state instead of per-token KV; migration for them is
+    priced at the same per-token rate over the head geometry they declare.
+    """
+    return 2.0 * cfg.num_layers * cfg.num_kv_heads * cfg.resolved_head_dim \
+        * dtype_bytes
+
+
 # ---------------------------------------------------------------- cost model
 class CostModel:
     """Single pricing front-end: Eq. 1 + normalizers + optional carbon term.
@@ -609,6 +624,95 @@ class CostModel:
     def wait_cost(self, wait_s: float) -> float:
         """The runtime-side price of queueing delay alone."""
         return (1.0 - self.cp.lam) * wait_s / self.cp.r_norm
+
+    # ------------------------------------------------------------ phase split
+    def split_energy(self, m: int, n: int, s: SystemProfile,
+                     batch: int = 1) -> Tuple[float, float]:
+        """(prefill-side J incl. per-query overhead, decode-side J).
+
+        The disaggregated scheduler prices the two phases on *different*
+        systems; each side here uses the same power model and operand order
+        as ``energy`` so a non-split query's (e_pf + e_dec) differs from
+        ``energy`` only by float re-association, never by modeling."""
+        ph = self.phases(m, n, s, batch)
+        e_pf_j = ph.t_prefill * s.power(ph.util_prefill) \
+            + ph.t_overhead * s.power(0.0)
+        e_dec_j = ph.t_decode * s.power(ph.util_decode)
+        return e_pf_j, e_dec_j
+
+    def split_runtime(self, m: int, n: int, s: SystemProfile,
+                      batch: int = 1) -> Tuple[float, float]:
+        """(prefill-side seconds incl. overhead, decode-side seconds)."""
+        ph = self.phases(m, n, s, batch)
+        return ph.t_overhead + ph.t_prefill, ph.t_decode
+
+    def split_energy_batch(self, m, n, s: SystemProfile,
+                           batch: int = 1) -> Tuple[np.ndarray, np.ndarray]:
+        """Vectorized ``split_energy`` — elementwise bit-identical."""
+        ph = self.price_batch(m, n, s, batch)
+
+        def power_w(util: np.ndarray) -> np.ndarray:
+            u = np.minimum(np.maximum(util, 0.0), 1.0)
+            return s.chips * (s.power_idle_w
+                              + (s.power_peak_w - s.power_idle_w) * u)
+
+        e_pf_j = ph.t_prefill * power_w(ph.util_prefill) \
+            + ph.t_overhead * s.power(0.0)
+        e_dec_j = ph.t_decode * power_w(ph.util_decode)
+        return e_pf_j, e_dec_j
+
+    def split_runtime_batch(self, m, n, s: SystemProfile,
+                            batch: int = 1) -> Tuple[np.ndarray, np.ndarray]:
+        """Vectorized ``split_runtime`` — elementwise bit-identical."""
+        ph = self.price_batch(m, n, s, batch)
+        return ph.t_overhead + ph.t_prefill, ph.t_decode
+
+    # ------------------------------------------------------------- migration
+    def migration_bytes(self, m: int, *, block_size: int = 0) -> float:
+        """Bytes a KV handoff of an m-token prefix moves, padded to whole
+        blocks when the paged pools declare a ``block_size`` (block-table
+        migration copies blocks, not tokens)."""
+        tokens = -(-m // block_size) * block_size if block_size else m
+        return tokens * kv_bytes_per_token(self.cfg)
+
+    def migration_seconds(self, bytes_moved: float, src: SystemProfile,
+                          dst: SystemProfile) -> float:
+        """Wall seconds to move ``bytes_moved`` of KV from ``src`` to ``dst``:
+        the inter-pool link transfer at the slower endpoint's advertised
+        ``link_bw_gbps``, plus the device-side gather (src) and scatter (dst)
+        through each endpoint's effective HBM bandwidth. Endpoints are
+        resolved through the oracle's calibration when it has one, so a
+        microbench KV-copy sample (``kernel == "kv_migrate"``) that refits
+        ``mem_eff`` reprices the copy too. inf when either endpoint has no
+        migration path."""
+        link_gbps = min(src.link_bw_gbps, dst.link_bw_gbps)
+        if link_gbps <= 0.0:
+            return math.inf
+        resolve = getattr(self.oracle, "resolve", None)
+        rs = resolve(src) if resolve is not None else src
+        rd = resolve(dst) if resolve is not None else dst
+        t_s = bytes_moved / (link_gbps * 0.125e9)     # gigabits/s -> bytes/s
+        t_s += bytes_moved / (rs.instance_hbm_bw * rs.mem_eff)
+        t_s += bytes_moved / (rd.instance_hbm_bw * rd.mem_eff)
+        return t_s
+
+    def migration_energy(self, t_s: float, src: SystemProfile,
+                         dst: SystemProfile) -> float:
+        """J charged for a handoff window of ``t_s`` seconds: both endpoints
+        held at their idle floor for the copy (conservative — the DMA engines
+        draw little above idle, but the instances cannot sleep)."""
+        return t_s * (src.power(0.0) + dst.power(0.0))
+
+    def migration_terms(self, m: int, src: SystemProfile, dst: SystemProfile,
+                        *, block_size: int = 0) -> Tuple[float, float, float]:
+        """(bytes, seconds, joules) of migrating an m-token KV prefix.
+
+        The single scalar path shared by the scheduler and BOTH fleet
+        engines — one call site per decision keeps the engines bit-for-bit
+        equivalent."""
+        bytes_moved = self.migration_bytes(m, block_size=block_size)
+        t_s = self.migration_seconds(bytes_moved, src, dst)
+        return bytes_moved, t_s, self.migration_energy(t_s, src, dst)
 
     def grams(self, m: int, n: int, s: SystemProfile, t_exec: float,
               batch: int = 1) -> float:

@@ -382,6 +382,170 @@ class CapacityAwareScheduler(Scheduler):
                 for q in sorted(queries, key=lambda q: q.arrival_s)]
 
 
+class DisaggregatedScheduler(Scheduler):
+    """Phase-split routing: prefill here, decode there, KV migrates between.
+
+    The paper routes whole queries, but its own Fig 1a/2a phenomenology says
+    the two phases have opposite hardware affinities — prefill is
+    compute-bound, decode is memory-bound (arXiv 2407.04014, 2504.17674).
+    This policy prices, per query, every single-pool assignment (identical
+    pricing to ``CapacityAwareScheduler``) AND every ordered pool pair
+    (a, b): prefill energy+runtime on ``a``, the priced KV-block migration
+    (``CostModel.migration_terms``), decode energy+runtime on ``b``, and both
+    queues' estimated waits. ``dispatch`` returns a ``SystemProfile`` for a
+    single-pool decision or an ``(a, b)`` tuple for a split — callers that
+    support handoff (both fleet engines, the serving router) understand the
+    tuple; ``choose``/``assign`` stay single-pool (a split is only priceable
+    against queue state, and the offline path has none).
+
+    Pairs are only considered when the query decodes (n > 0) and both
+    endpoints advertise a positive ``link_bw_gbps``; zero-decode queries
+    therefore never hand off. Candidates are scanned singles-first, then
+    pairs in systems order, strict ``<`` — so ties go to the simpler
+    single-pool plan, and the scan order is shared bit-for-bit with the
+    table-backed ``dispatch_rid`` path the vectorized engine uses.
+    """
+
+    def __init__(self, cfg, systems: Sequence[SystemProfile],
+                 cp: CostParams = CostParams(), *,
+                 model: Optional[CostModel] = None):
+        super().__init__(cfg, systems, cp, model=model)
+        self._rid_cost: Dict[str, "np.ndarray"] = {}
+        self._rid_runtime_s: Dict[str, "np.ndarray"] = {}
+        self._rid_e_pf_j: Dict[str, "np.ndarray"] = {}
+        self._rid_e_dec_j: Dict[str, "np.ndarray"] = {}
+        self._rid_r_pf_s: Dict[str, "np.ndarray"] = {}
+        self._rid_r_dec_s: Dict[str, "np.ndarray"] = {}
+
+    def choose(self, q: Query) -> SystemProfile:
+        """Workload-only fallback: best single system (no queue state, so no
+        split — the migration trade is priced in ``dispatch``)."""
+        return min(self.systems,
+                   key=lambda s: self.model.cost(q.m, q.n, s))
+
+    # ----------------------------------------------------------- scalar path
+    def _pair_cost(self, e_pf_j: float, r_pf_s: float, e_dec_j: float,
+                   r_dec_s: float, mig_s: float, mig_j: float,
+                   wait_s: float) -> float:
+        """Eq. 1 over a split plan. One shared float path: the event engine's
+        scalar dispatch and the vectorized engine's table-backed
+        ``dispatch_rid`` both come through here with the same operands."""
+        cp = self.cp
+        eterm = (e_pf_j + mig_j + e_dec_j) / cp.e_norm
+        rterm = (r_pf_s + mig_s + r_dec_s) / cp.r_norm
+        c = cp.lam * eterm + (1.0 - cp.lam) * rterm
+        if wait_s:
+            c = c + (1.0 - cp.lam) * wait_s / cp.r_norm
+        return c
+
+    def _pair_waits(self, q: Query, snap_a: Optional[PoolSnapshot],
+                    snap_b: Optional[PoolSnapshot], r_pf_s: float,
+                    r_dec_s: float) -> float:
+        """Both queues' estimated waits for a split: the prefill pool is
+        charged prefill-only block pressure (ceil(m/bs)); the decode pool the
+        full-context pressure it will hold (ceil((m+n)/bs))."""
+        wait_s = 0.0
+        if snap_a is not None:
+            wait_s += snap_a.est_wait_s
+            wait_s += snap_a.mem_wait_s(q.m, 0, r_pf_s)
+        if snap_b is not None:
+            wait_s += snap_b.est_wait_s
+            wait_s += snap_b.mem_wait_s(q.m, q.n, r_dec_s)
+        return wait_s
+
+    def dispatch(self, q: Query, fleet: Optional[FleetState] = None):
+        if fleet is None:
+            return self.choose(q)
+        best, best_c = None, float("inf")
+        for s in self.systems:
+            snap = fleet.for_system(s)
+            wait_s = snap.est_wait_s if snap is not None else 0.0
+            if snap is not None:
+                wait_s += snap.mem_wait_s(q.m, q.n,
+                                          self.model.runtime(q.m, q.n, s))
+            c = self.model.cost(q.m, q.n, s, wait_s=wait_s)
+            if c < best_c:
+                best, best_c = s, c
+        if q.n <= 0:
+            return best
+        for a in self.systems:
+            for b in self.systems:
+                if a is b or min(a.link_bw_gbps, b.link_bw_gbps) <= 0.0:
+                    continue
+                snap_a = fleet.for_system(a)
+                snap_b = fleet.for_system(b)
+                e_pf_j, _ = self.model.split_energy(q.m, q.n, a)
+                _, e_dec_j = self.model.split_energy(q.m, q.n, b)
+                r_pf_s, _ = self.model.split_runtime(q.m, q.n, a)
+                _, r_dec_s = self.model.split_runtime(q.m, q.n, b)
+                bs = snap_a.block_size if snap_a is not None else 0
+                _, mig_s, mig_j = self.model.migration_terms(
+                    q.m, a, b, block_size=bs)
+                wait_s = self._pair_waits(q, snap_a, snap_b, r_pf_s, r_dec_s)
+                c = self._pair_cost(e_pf_j, r_pf_s, e_dec_j, r_dec_s,
+                                    mig_s, mig_j, wait_s)
+                if c < best_c:
+                    best, best_c = (a, b), c
+        return best
+
+    # ------------------------------------------------------ table-backed path
+    def prepare_batch(self, m, n) -> None:
+        """Precompute per-system cost/runtime and phase-split tables over the
+        workload's (m, n) arrays (vectorized fleet engine)."""
+        for s in self.systems:
+            self._rid_cost[s.name] = self.model.cost_batch(m, n, s)
+            self._rid_runtime_s[s.name] = self.model.runtime_batch(m, n, s)
+            e_pf_j, e_dec_j = self.model.split_energy_batch(m, n, s)
+            r_pf_s, r_dec_s = self.model.split_runtime_batch(m, n, s)
+            self._rid_e_pf_j[s.name] = e_pf_j
+            self._rid_e_dec_j[s.name] = e_dec_j
+            self._rid_r_pf_s[s.name] = r_pf_s
+            self._rid_r_dec_s[s.name] = r_dec_s
+
+    def dispatch_rid(self, rid: int, q: Query,
+                     fleet: Optional[FleetState]):
+        """``dispatch`` with every per-query price read from the
+        ``prepare_batch`` tables (elementwise bit-identical to the scalar
+        calls); the migration terms and the candidate scan are the same
+        scalar code in the same order."""
+        if fleet is None:
+            return self.choose(q)
+        cp = self.cp
+        best, best_c = None, float("inf")
+        for s in self.systems:
+            snap = fleet.for_system(s)
+            wait_s = snap.est_wait_s if snap is not None else 0.0
+            if snap is not None:
+                wait_s += snap.mem_wait_s(
+                    q.m, q.n, float(self._rid_runtime_s[s.name][rid]))
+            c = float(self._rid_cost[s.name][rid])
+            if wait_s:
+                c = c + (1.0 - cp.lam) * wait_s / cp.r_norm
+            if c < best_c:
+                best, best_c = s, c
+        if q.n <= 0:
+            return best
+        for a in self.systems:
+            for b in self.systems:
+                if a is b or min(a.link_bw_gbps, b.link_bw_gbps) <= 0.0:
+                    continue
+                snap_a = fleet.for_system(a)
+                snap_b = fleet.for_system(b)
+                e_pf_j = float(self._rid_e_pf_j[a.name][rid])
+                e_dec_j = float(self._rid_e_dec_j[b.name][rid])
+                r_pf_s = float(self._rid_r_pf_s[a.name][rid])
+                r_dec_s = float(self._rid_r_dec_s[b.name][rid])
+                bs = snap_a.block_size if snap_a is not None else 0
+                _, mig_s, mig_j = self.model.migration_terms(
+                    q.m, a, b, block_size=bs)
+                wait_s = self._pair_waits(q, snap_a, snap_b, r_pf_s, r_dec_s)
+                c = self._pair_cost(e_pf_j, r_pf_s, e_dec_j, r_dec_s,
+                                    mig_s, mig_j, wait_s)
+                if c < best_c:
+                    best, best_c = (a, b), c
+        return best
+
+
 # ------------------------------------------------------------------ baselines
 class SingleSystemScheduler(Scheduler):
     """Workload-unaware: everything on one system (paper's dashed lines)."""

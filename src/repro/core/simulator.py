@@ -109,14 +109,6 @@ class HeadlineResult:
     savings_vs_all_perf: float
     runtime_penalty_frac_vs_all_perf: float    # dimensionless, e.g. 0.05
 
-    @property
-    def runtime_penalty_vs_all_perf(self) -> float:
-        import warnings
-        warnings.warn("HeadlineResult.runtime_penalty_vs_all_perf is "
-                      "deprecated; use runtime_penalty_frac_vs_all_perf",
-                      DeprecationWarning, stacklevel=2)
-        return self.runtime_penalty_frac_vs_all_perf
-
 
 def headline(cfg: ModelConfig, queries: Sequence[Query], eff: SystemProfile,
              perf: SystemProfile, *, t_in: int = 32, axis: str = "in",

@@ -23,7 +23,6 @@ peak/idle constants.
 from __future__ import annotations
 
 import functools
-import warnings
 from dataclasses import dataclass, replace
 from typing import Dict, Optional, Tuple
 
@@ -88,24 +87,16 @@ class SystemProfile:
     # without "significant runtime penalties".
     sat_ctx: Optional[float] = None
     max_out_tokens: int = 0   # advisory output cap (0 = unlimited)
+    # Inter-pool migration link bandwidth (gigabits/s) from/to this instance
+    # class: the DCN/PCIe path a disaggregated KV handoff rides, as opposed to
+    # ``ici_bw`` (the intra-instance chip interconnect). 0.0 = no migration
+    # path; the DisaggregatedScheduler never splits a query across a pool
+    # pair unless both endpoints advertise a positive link bandwidth.
+    link_bw_gbps: float = 0.0
     # Optional explicit power-state table; None = derive on demand from the
     # peak/idle constants (``default_power_states``). Kept Optional so every
     # pre-power-management profile (and its hash/equality) is unchanged.
     power_states: Optional[PowerStateTable] = None
-
-    # Deprecated unit-less aliases (one release): the fields were renamed to
-    # carry their unit like every other quantity in the repo.
-    @property
-    def power_peak(self) -> float:
-        warnings.warn("SystemProfile.power_peak is deprecated; use "
-                      "power_peak_w", DeprecationWarning, stacklevel=2)
-        return self.power_peak_w
-
-    @property
-    def power_idle(self) -> float:
-        warnings.warn("SystemProfile.power_idle is deprecated; use "
-                      "power_idle_w", DeprecationWarning, stacklevel=2)
-        return self.power_idle_w
 
     def degradation(self, ctx: float) -> float:
         if self.sat_ctx is None:
@@ -173,6 +164,7 @@ TPU_V5E_PERF = SystemProfile(
     power_peak_w=170.0,         # ~ per-chip board power under load
     power_idle_w=55.0,          # ~ allocated-idle
     overhead_s=0.04,
+    link_bw_gbps=100.0,         # ~ per-host DCN NIC
 )
 
 # efficiency class: down-clocked v5e-lite-like single chip. Half clock ->
@@ -184,6 +176,7 @@ TPU_V5LITE_EFF = SystemProfile(
     overhead_s=0.08,          # weaker host, slower launch path
     sat_ctx=2048.0,           # single chip: VMEM/HBM pressure at long context
     max_out_tokens=4096,
+    link_bw_gbps=100.0,       # same DCN fabric as the perf class
 )
 
 # --------------------------------------------------------------------------- paper replay
@@ -205,6 +198,7 @@ A100_NODE = SystemProfile(
     peak_flops=312e12, hbm_bw=1555e9, ici_bw=300e9,
     power_peak_w=400.0, power_idle_w=55.0,
     overhead_s=0.06,
+    link_bw_gbps=200.0,       # HDR InfiniBand host fabric
 )
 
 V100_NODE = SystemProfile(
@@ -212,6 +206,7 @@ V100_NODE = SystemProfile(
     peak_flops=125e12, hbm_bw=900e9, ici_bw=150e9,
     power_peak_w=300.0, power_idle_w=45.0,
     overhead_s=0.10,
+    link_bw_gbps=100.0,       # EDR InfiniBand host fabric
 )
 
 PROFILES: Dict[str, SystemProfile] = {

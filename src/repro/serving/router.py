@@ -26,8 +26,8 @@ import numpy as np
 from repro.configs.base import ModelConfig
 from repro.core.pricing import CostModel, CostParams, PerfOracle
 from repro.core.scheduler import (CapacityAwareScheduler, CostOptimalScheduler,
-                                  FleetState, PoolSnapshot, Scheduler,
-                                  ThresholdScheduler)
+                                  DisaggregatedScheduler, FleetState,
+                                  PoolSnapshot, Scheduler, ThresholdScheduler)
 from repro.core.systems import SystemProfile
 from repro.core.workload import Query
 from repro.serving.batching import (ContinuousBatcher, PagedContinuousBatcher,
@@ -96,6 +96,8 @@ class FleetRouter:
         elif policy == "capacity_aware":
             self.scheduler = CapacityAwareScheduler(cfg, systems, self.counts,
                                                     model=model)
+        elif policy == "disaggregated":
+            self.scheduler = DisaggregatedScheduler(cfg, systems, model=model)
         else:
             raise ValueError(policy)
         self._name_of = {s.name: n for n, s in pools.items()}
@@ -104,8 +106,14 @@ class FleetRouter:
                              "dispatch maps a chosen system back to its pool "
                              "by name")
         self._rid = 0
-        # batcher-executed requests awaiting actual-token reconciliation
+        # batcher-executed requests awaiting actual-token reconciliation:
+        # (pool, m, expected_n, Request, decode-pool-or-None)
         self._pending: List[tuple] = []
+        # decode pool chosen by the most recent route() when it picked a
+        # split plan, else None — submit() reads it to arm the handoff
+        self._last_split: Optional[str] = None
+        # rid -> (prefill pool, decode pool, Request) awaiting KV handoff
+        self._handoffs: Dict[int, tuple] = {}
 
     # ------------------------------------------------------------- batchers
     def attach_batchers(self, slots: int = 4, *, paged: bool = False,
@@ -203,6 +211,9 @@ class FleetRouter:
             fleet = self._fleet_state(arrival_s)
         sys = self.scheduler.dispatch(q, fleet)
         self.scheduler.observe(q, sys)
+        self._last_split = None
+        if isinstance(sys, tuple):            # disaggregated: (prefill, decode)
+            return self._route_split(q, sys[0], sys[1])
         name = self._name_of[sys.name]
         st = self.stats[name]
         st.queries += 1
@@ -215,6 +226,59 @@ class FleetRouter:
         st.expected_runtime_s += r
         st.expected_tokens += m + expected_n
         return name
+
+    def _route_split(self, q: Query, sys_a: SystemProfile,
+                     sys_b: SystemProfile) -> str:
+        """Book a prefill-here/decode-there plan: prefill + priced KV
+        migration on the prefill pool, decode on the decode pool — the same
+        attribution the fleet simulator's ``_handoff`` uses. Returns the
+        prefill pool's name (where the request is submitted); the decode
+        pool is stashed in ``_last_split`` for ``submit`` to arm the
+        handoff."""
+        name_a = self._name_of[sys_a.name]
+        name_b = self._name_of[sys_b.name]
+        self._last_split = name_b
+        bs = getattr(self.batchers.get(name_a), "block_size", 0)
+        e_pf, _ = self.model.split_energy(q.m, q.n, sys_a)
+        _, e_dec = self.model.split_energy(q.m, q.n, sys_b)
+        r_pf, _ = self.model.split_runtime(q.m, q.n, sys_a)
+        _, r_dec = self.model.split_runtime(q.m, q.n, sys_b)
+        _, mig_s, mig_j = self.model.migration_terms(q.m, sys_a, sys_b,
+                                                     block_size=bs)
+        st_a, st_b = self.stats[name_a], self.stats[name_b]
+        st_a.queries += 1                     # query counted at its prefill pool
+        st_a.energy_j += e_pf + mig_j
+        st_a.runtime_s += r_pf + mig_s
+        st_a.tokens += q.m
+        st_a.expected_energy_j += e_pf + mig_j
+        st_a.expected_runtime_s += r_pf + mig_s
+        st_a.expected_tokens += q.m
+        st_b.energy_j += e_dec
+        st_b.runtime_s += r_dec
+        st_b.tokens += q.n
+        st_b.expected_energy_j += e_dec
+        st_b.expected_runtime_s += r_dec
+        st_b.expected_tokens += q.n
+        return name_a
+
+    def _reconcile_split(self, name_a: str, name_b: str, m: int,
+                         expected_n: int, actual_n: int) -> None:
+        """Split-plan analogue of ``_reconcile``: re-book each phase term on
+        its own pool at the emitted token count. Migration depends only on
+        ``m`` and needs no adjustment."""
+        if actual_n == expected_n:
+            return
+        sys_a, sys_b = self.pools[name_a], self.pools[name_b]
+        st_a, st_b = self.stats[name_a], self.stats[name_b]
+        st_a.energy_j += (self.model.split_energy(m, actual_n, sys_a)[0]
+                          - self.model.split_energy(m, expected_n, sys_a)[0])
+        st_a.runtime_s += (self.model.split_runtime(m, actual_n, sys_a)[0]
+                           - self.model.split_runtime(m, expected_n, sys_a)[0])
+        st_b.energy_j += (self.model.split_energy(m, actual_n, sys_b)[1]
+                          - self.model.split_energy(m, expected_n, sys_b)[1])
+        st_b.runtime_s += (self.model.split_runtime(m, actual_n, sys_b)[1]
+                           - self.model.split_runtime(m, expected_n, sys_b)[1])
+        st_b.tokens += actual_n - expected_n
 
     def _reconcile(self, name: str, m: int, expected_n: int,
                    actual_n: int) -> None:
@@ -242,19 +306,40 @@ class FleetRouter:
         """
         self._rid += 1
         name = self.route(len(tokens), max_new_tokens, arrival_s)
+        split_to = self._last_split
         out, req = None, None
         if name in self.batchers:
             req = Request(self._rid, np.asarray(tokens), max_new_tokens,
                           eos_id=eos_id)
-            self.batchers[name].submit(req)
-            self._pending.append((name, len(tokens), max_new_tokens, req))
+            src, dst = self.batchers[name], self.batchers.get(split_to)
+            if (split_to is not None
+                    and isinstance(src, PagedContinuousBatcher)
+                    and isinstance(dst, PagedContinuousBatcher)
+                    and src.block_size == dst.block_size):
+                # live handoff: prefill on `name`, hold, then adopt_lane
+                # migrates the KV blocks to `split_to` during drain()
+                req.hold = True
+                self._handoffs[self._rid] = (name, split_to, req)
+            else:
+                # split plan priced/booked but not executable on these
+                # backends (dense batcher or block-size mismatch): the
+                # request runs entirely on the prefill pool — execution here
+                # is functional, the booking keeps the priced plan
+                split_to = None
+            src.submit(req)
+            self._pending.append((name, len(tokens), max_new_tokens, req,
+                                  split_to))
         elif name in self.engines:
             import jax.numpy as jnp
             res = self.engines[name].generate(
                 {"tokens": jnp.asarray(tokens, jnp.int32)[None]}, max_new_tokens,
                 eos_id=eos_id)
             out = res.tokens[0]
-            self._reconcile(name, len(tokens), max_new_tokens, len(out))
+            if split_to is not None:
+                self._reconcile_split(name, split_to, len(tokens),
+                                      max_new_tokens, len(out))
+            else:
+                self._reconcile(name, len(tokens), max_new_tokens, len(out))
         sysp = self.pools[name]
         return RoutedRequest(self._rid, name,
                              self.model.energy(len(tokens), max_new_tokens, sysp),
@@ -264,13 +349,65 @@ class FleetRouter:
     def drain(self, max_ticks: int = 10_000) -> None:
         """Run every pool's continuous-batching loop until all requests done,
         then reconcile PoolStats against the tokens actually emitted (EOS may
-        have retired requests before their declared budget)."""
-        for cb in self.batchers.values():
-            cb.run(max_ticks)
-        for name, m, expected_n, req in self._pending:
+        have retired requests before their declared budget).
+
+        With handoffs pending the pools are ticked in lock-step so a held
+        request can finish prefill on one pool and resume decode on another
+        mid-drain; without any, each pool just runs to completion."""
+        if self._handoffs:
+            ticks = 0
+            while ticks < max_ticks and (
+                    self._handoffs
+                    or any(cb.busy for cb in self.batchers.values())):
+                for cb in self.batchers.values():
+                    if cb.busy:
+                        cb.step()
+                if self._handoffs:
+                    self._do_handoffs()
+                ticks += 1
+        else:
+            for cb in self.batchers.values():
+                cb.run(max_ticks)
+        for name, m, expected_n, req, split_to in self._pending:
             if req.done:
-                self._reconcile(name, m, expected_n, len(req.out_tokens))
+                if split_to is None:
+                    self._reconcile(name, m, expected_n, len(req.out_tokens))
+                else:
+                    self._reconcile_split(name, split_to, m, expected_n,
+                                          len(req.out_tokens))
         self._pending = [p for p in self._pending if not p[3].done]
+
+    def _do_handoffs(self) -> None:
+        """Adopt every held request whose prefill has finished: the decode
+        pool copies its KV blocks (``adopt_lane``) and the prefill-side lane
+        is released. A lane-starved or block-starved decode pool leaves the
+        handoff pending — retried next tick, after its own retirements have
+        freed capacity."""
+        remaining: Dict[int, tuple] = {}
+        for rid, (src_name, dst_name, req) in self._handoffs.items():
+            src = self.batchers[src_name]
+            if req.done:
+                # EOS on the very first token, mid-prefill: nothing decodes
+                # and the booked migration never happens — undo it in the
+                # execution-faithful totals (expected_* keeps the plan)
+                bs = getattr(src, "block_size", 0)
+                _, mig_s, mig_j = self.model.migration_terms(
+                    len(req.tokens), self.pools[src_name],
+                    self.pools[dst_name], block_size=bs)
+                self.stats[src_name].energy_j -= mig_j
+                self.stats[src_name].runtime_s -= mig_s
+                continue
+            src_i = next((i for i, r in enumerate(src.active) if r is req),
+                         None)
+            if src_i is None or not req.out_tokens or \
+                    src._lane[src_i].prefilled < len(req.tokens):
+                remaining[rid] = (src_name, dst_name, req)   # still prefilling
+                continue
+            if self.batchers[dst_name].adopt_lane(req, src, src_i) is None:
+                remaining[rid] = (src_name, dst_name, req)   # target starved
+                continue
+            src.release_lane(src_i)
+        self._handoffs = remaining
 
     def fleet_report(self) -> Dict[str, Dict]:
         return {n: vars(s) for n, s in self.stats.items()}

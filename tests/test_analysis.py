@@ -432,18 +432,23 @@ def test_batched_sync_rewrite_preserves_tokens(engine):
         assert req.out_tokens == list(np.asarray(ref.tokens)[0])
 
 
-# ============================================= regression: deprecated aliases
-def test_system_profile_deprecated_power_aliases():
-    with pytest.warns(DeprecationWarning, match="power_peak_w"):
-        assert TPU_V5E_PERF.power_peak == TPU_V5E_PERF.power_peak_w
-    with pytest.warns(DeprecationWarning, match="power_idle_w"):
-        assert TPU_V5E_PERF.power_idle == TPU_V5E_PERF.power_idle_w
+# ============================================= regression: removed aliases
+def test_system_profile_power_aliases_removed():
+    """The PR-6 one-release DeprecationWarning aliases are gone: the
+    unit-suffixed fields are the only spelling."""
+    with pytest.raises(AttributeError):
+        TPU_V5E_PERF.power_peak
+    with pytest.raises(AttributeError):
+        TPU_V5E_PERF.power_idle
+    assert TPU_V5E_PERF.power_peak_w == 170.0
+    assert TPU_V5E_PERF.power_idle_w == 55.0
 
 
-def test_headline_result_deprecated_penalty_alias():
+def test_headline_result_penalty_alias_removed():
     hd = HeadlineResult(hybrid=None, baselines={}, best_baseline="all_perf",
                         savings_vs_best_baseline=0.075,
                         savings_vs_all_perf=0.075,
                         runtime_penalty_frac_vs_all_perf=0.05)
-    with pytest.warns(DeprecationWarning, match="frac"):
-        assert hd.runtime_penalty_vs_all_perf == 0.05
+    with pytest.raises(AttributeError):
+        hd.runtime_penalty_vs_all_perf
+    assert hd.runtime_penalty_frac_vs_all_perf == 0.05

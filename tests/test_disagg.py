@@ -1,0 +1,346 @@
+"""Disaggregated prefill/decode: priced KV migration, pair dispatch, dual
+fleet-engine equivalence, and the serving handoff seam
+(``migrate_kv_blocks`` / ``adopt_lane``)."""
+import math
+
+import jax
+import numpy as np
+import pytest
+
+from repro.configs import get_config
+from repro.core import (DisaggregatedScheduler, PoolSpec, Query, WorkloadSpec,
+                        sample_workload, simulate_fleet)
+from repro.core.pricing import CostModel, kv_bytes_per_token
+from repro.core.scheduler import (FleetState, PoolSnapshot, Scheduler,
+                                  kv_blocks_needed)
+from repro.core.systems import SystemProfile
+
+CFG = get_config("qwen2.5-3b")
+
+
+def _systems(link=100.0):
+    """The disagg probe pair (benchmarks/disagg_sweep.py): near-dark idle on
+    the eff pool, fast high-idle prefill on the perf pool."""
+    eff = SystemProfile(name="eff", kind="eff", chips=1, peak_flops=90e12,
+                        hbm_bw=0.8e12, ici_bw=50e9, power_peak_w=220.0,
+                        power_idle_w=8.0, overhead_s=0.02, sat_ctx=2048.0,
+                        link_bw_gbps=link)
+    perf = SystemProfile(name="perf", kind="perf", chips=2, peak_flops=200e12,
+                         hbm_bw=1.25e12, ici_bw=100e9, power_peak_w=350.0,
+                         power_idle_w=60.0, overhead_s=0.01, sat_ctx=None,
+                         link_bw_gbps=link)
+    return eff, perf
+
+
+def _idle_fleet(*systems):
+    return FleetState(pools={s.name: PoolSnapshot(system=s, block_size=16)
+                             for s in systems})
+
+
+# ---------------------------------------------------------------- pricing
+def test_migration_terms_pricing():
+    eff, perf = _systems(link=100.0)
+    model = CostModel(CFG)
+    m, bs = 250, 16
+    nbytes, t_s, e_j = model.migration_terms(m, perf, eff, block_size=bs)
+    blocks = kv_blocks_needed(m, bs)
+    assert nbytes == blocks * bs * kv_bytes_per_token(CFG)
+    # link transfer + gather at the source + scatter at the destination
+    expect = (nbytes / (100.0 * 0.125e9)
+              + nbytes / (perf.instance_hbm_bw * perf.mem_eff)
+              + nbytes / (eff.instance_hbm_bw * eff.mem_eff))
+    assert t_s == pytest.approx(expect)
+    assert e_j == pytest.approx(t_s * (perf.power(0.0) + eff.power(0.0)))
+    # token-granular when the serving side reports no block size
+    nb0, _, _ = model.migration_terms(m, perf, eff, block_size=0)
+    assert nb0 == m * kv_bytes_per_token(CFG)
+
+
+def test_migration_seconds_inf_without_link():
+    eff, perf = _systems(link=0.0)
+    model = CostModel(CFG)
+    assert math.isinf(model.migration_seconds(1e6, eff, perf))
+
+
+# --------------------------------------------------------------- scheduler
+def test_dispatch_returns_pair_for_prompt_heavy_query():
+    eff, perf = _systems()
+    sched = DisaggregatedScheduler(CFG, [eff, perf])
+    got = sched.dispatch(Query(250, 50, 0.0), _idle_fleet(eff, perf))
+    assert isinstance(got, tuple) and got == (perf, eff)
+    # workload-only fallback (no queue state) never splits
+    assert isinstance(sched.dispatch(Query(250, 50, 0.0), None),
+                      SystemProfile)
+
+
+def test_dispatch_never_pairs_without_decode_or_link():
+    eff, perf = _systems()
+    sched = DisaggregatedScheduler(CFG, [eff, perf])
+    fleet = _idle_fleet(eff, perf)
+    assert isinstance(sched.dispatch(Query(250, 0, 0.0), fleet),
+                      SystemProfile)
+    eff0, perf0 = _systems(link=0.0)
+    sched0 = DisaggregatedScheduler(CFG, [eff0, perf0])
+    got = sched0.dispatch(Query(250, 50, 0.0), _idle_fleet(eff0, perf0))
+    assert isinstance(got, SystemProfile)   # zero link: no NaN, no pair
+
+
+def test_dispatch_rid_matches_scalar_dispatch():
+    eff, perf = _systems()
+    sched = DisaggregatedScheduler(CFG, [eff, perf])
+    qs = sample_workload(60, seed=3,
+                         spec=WorkloadSpec(mu_in=5.0, mu_out=3.5))
+    m = np.array([q.m for q in qs])
+    n = np.array([q.n for q in qs])
+    sched.prepare_batch(m, n)
+    fleet = _idle_fleet(eff, perf)
+    for rid, q in enumerate(qs):
+        assert sched.dispatch_rid(rid, q, fleet) == sched.dispatch(q, fleet)
+
+
+# ------------------------------------------------------- fleet-sim equivalence
+def _disagg_pools(eff, perf):
+    return {"eff": PoolSpec(eff, instances=4, slots=4, kv_blocks=4096),
+            "perf": PoolSpec(perf, instances=4, slots=4, kv_blocks=4096)}
+
+
+@pytest.mark.parametrize("seed,disc", [(0, "fifo"), (1, "sjf")])
+def test_fleet_engines_bit_identical_under_splits(seed, disc):
+    eff, perf = _systems()
+    qs = sample_workload(160, seed=seed,
+                         spec=WorkloadSpec(mu_in=5.5, sigma_in=0.7,
+                                           mu_out=4.0, sigma_out=0.8,
+                                           rate_qps=20.0),
+                         arrival_process="diurnal")
+    runs = {}
+    for engine in ("event", "vectorized"):
+        runs[engine] = simulate_fleet(
+            CFG, qs, _disagg_pools(eff, perf),
+            DisaggregatedScheduler(CFG, [eff, perf]),
+            queue_discipline=disc, engine=engine)
+    se, sv = runs["event"].summary(), runs["vectorized"].summary()
+    assert se == sv, {k: (se[k], sv[k]) for k in se if se[k] != sv[k]}
+    te = [(x.rid, x.pool, x.pool_decode, x.t_arrival, x.t_start, x.t_decode,
+           x.t_done, x.energy_j, x.mig_bytes) for x in runs["event"].records]
+    tv = [(x.rid, x.pool, x.pool_decode, x.t_arrival, x.t_start, x.t_decode,
+           x.t_done, x.energy_j, x.mig_bytes)
+          for x in runs["vectorized"].records]
+    assert te == tv
+    assert any(x[2] for x in te), "probe config stopped splitting"
+
+
+def test_no_link_means_no_splits_and_no_migration():
+    eff, perf = _systems(link=0.0)
+    qs = sample_workload(60, seed=0,
+                         spec=WorkloadSpec(mu_in=5.5, mu_out=4.0,
+                                           rate_qps=20.0))
+    r = simulate_fleet(CFG, qs, _disagg_pools(eff, perf),
+                       DisaggregatedScheduler(CFG, [eff, perf]))
+    assert r.mig_bytes == 0.0
+    assert all(rec.pool_decode == "" and rec.mig_bytes == 0.0
+               for rec in r.records)
+
+
+class _AlwaysPair(Scheduler):
+    """Degenerate policy: returns a split plan for EVERY query — the engines
+    must degrade n<=0 tuples to single-pool prefill with no handoff."""
+
+    def choose(self, q):
+        return self.systems[0]
+
+    def dispatch(self, q, fleet=None):
+        return (self.systems[1], self.systems[0])
+
+
+def test_zero_decode_query_degrades_tuple_to_single_pool():
+    eff, perf = _systems()
+    qs = [Query(64, 0, 0.0), Query(32, 0, 0.1)]
+    for engine in ("event", "vectorized"):
+        r = simulate_fleet(CFG, qs, _disagg_pools(eff, perf),
+                           _AlwaysPair(CFG, [eff, perf]), engine=engine)
+        assert all(rec.pool == "perf" and rec.pool_decode == ""
+                   and rec.mig_bytes == 0.0 for rec in r.records)
+
+
+# ------------------------------------------------------------- percentiles
+def test_ttft_tpot_percentiles_and_summary_keys():
+    eff, perf = _systems()
+    qs = sample_workload(80, seed=2,
+                         spec=WorkloadSpec(mu_in=5.5, mu_out=4.0,
+                                           rate_qps=20.0))
+    r = simulate_fleet(CFG, qs, _disagg_pools(eff, perf),
+                       DisaggregatedScheduler(CFG, [eff, perf]))
+    recs = r.records
+    ttft = np.array([x.t_decode - x.t_arrival for x in recs])
+    tpot = np.array([(x.t_done - x.t_decode) / max(1, q.n)
+                     for x, q in zip(recs, qs)])
+    assert r.ttft_percentile(100.0) == pytest.approx(ttft.max())
+    assert r.ttft_percentile(0.0) == pytest.approx(ttft.min())
+    assert r.ttft_percentile(99.0) == pytest.approx(
+        float(np.percentile(ttft, 99.0)))
+    assert r.tpot_percentile(50.0) == pytest.approx(
+        float(np.percentile(tpot, 50.0)))
+    assert r.p99_ttft_s == r.ttft_percentile(99.0)
+    s = r.summary()
+    assert s["p99_ttft_s"] == r.p99_ttft_s
+    assert s["mig_bytes"] == r.mig_bytes == pytest.approx(
+        sum(x.mig_bytes for x in recs))
+    assert r.mig_bytes > 0.0             # the probe config splits
+
+
+# ------------------------------------------------------------ serving handoff
+@pytest.fixture(scope="module")
+def engine():
+    from repro.models import model as M
+    from repro.serving.engine import InferenceEngine
+    cfg = get_config("smollm-360m").reduced()
+    params = M.init_params(cfg, jax.random.PRNGKey(7))
+    return InferenceEngine(cfg, params, max_len=96)
+
+
+def test_migrate_kv_blocks_copies_not_steals(engine):
+    import jax.numpy as jnp
+    from repro.serving.batching import migrate_kv_blocks
+    cfg = engine.cfg
+    src = engine.new_paged_cache(2, 8, 4)
+    dst = engine.new_paged_cache(2, 8, 4)
+    src = dict(src, kp=src["kp"].at[:, 1:3].set(1.5),
+               vp=src["vp"].at[:, 1:3].set(-2.5))
+    dst2, moved = migrate_kv_blocks(src, [1, 2], dst, [3, 4])
+    np.testing.assert_array_equal(np.asarray(dst2["kp"][:, 3:5]),
+                                  np.asarray(src["kp"][:, 1:3]))
+    np.testing.assert_array_equal(np.asarray(dst2["vp"][:, 3:5]),
+                                  np.asarray(src["vp"][:, 1:3]))
+    assert float(jnp.sum(jnp.abs(dst2["kp"][:, :3]))) == 0.0  # others untouched
+    # source unchanged (copy, not steal)
+    assert float(src["kp"][0, 1, 0, 0, 0]) == 1.5
+    per_block = 2 * cfg.num_layers * cfg.num_kv_heads * 4 * \
+        cfg.resolved_head_dim * 4
+    assert moved == 2 * per_block
+    same, zero = migrate_kv_blocks(src, [], dst, [])
+    assert zero == 0 and same is dst
+    with pytest.raises(ValueError):
+        migrate_kv_blocks(src, [1, 2], dst, [3])
+    with pytest.raises(ValueError):          # block-size mismatch
+        migrate_kv_blocks(src, [1], engine.new_paged_cache(2, 8, 8), [1])
+
+
+def _disagg_router(engine, *, dst_blocks=48):
+    from repro.core.pricing import CostParams
+    from repro.serving.router import FleetRouter
+    eff = SystemProfile(name="eff", kind="eff", chips=1, peak_flops=5e12,
+                        hbm_bw=0.8e12, ici_bw=50e9, power_peak_w=120.0,
+                        power_idle_w=8.0, overhead_s=0.02, sat_ctx=2048.0,
+                        link_bw_gbps=400.0)
+    perf = SystemProfile(name="perf", kind="perf", chips=4, peak_flops=400e12,
+                         hbm_bw=1.25e12, ici_bw=100e9, power_peak_w=350.0,
+                         power_idle_w=100.0, overhead_s=0.0005,
+                         link_bw_gbps=400.0)
+    # price with the UNREDUCED config: the reduced test model's decode is too
+    # small for any split plan to beat migration
+    pricing = CostModel(get_config("smollm-360m"), None, CostParams(lam=1.0))
+    router = FleetRouter(engine.cfg, {"eff": eff, "perf": perf},
+                         {"eff": engine, "perf": engine},
+                         policy="disaggregated", model=pricing)
+    router.attach_batchers(slots=2, paged=True, num_blocks=48, block_size=8,
+                           chunk=8)
+    return router
+
+
+def test_disagg_router_token_parity_across_handoff(engine):
+    import jax.numpy as jnp
+    router = _disagg_router(engine)
+    prompts = [np.arange(40 + 7 * i) % engine.cfg.vocab_size for i in range(3)]
+    routed = [router.submit(p, 6) for p in prompts]
+    assert router._handoffs, "expected split plans from the pricing probe"
+    assert all(rr.request.hold for rr in routed)
+    router.drain()
+    assert not router._handoffs
+    for rr, p in zip(routed, prompts):
+        assert rr.request.done and not rr.request.hold
+        solo = engine.generate({"tokens": jnp.asarray(p, jnp.int32)[None]}, 6)
+        np.testing.assert_array_equal(np.asarray(rr.request.out_tokens[:6]),
+                                      solo.tokens[0])
+    # query counted at its prefill pool; decode tokens booked at the decode
+    # pool; every block returned on both ends
+    rep = router.fleet_report()
+    assert rep["perf"]["queries"] == 3 and rep["eff"]["queries"] == 0
+    assert rep["eff"]["tokens"] == 18 and rep["eff"]["energy_j"] > 0
+    for cb in router.batchers.values():
+        assert all(r is None for r in cb.active) and not cb.queue
+        evictable = sum(1 for b in cb.prefix._map.values()
+                        if cb.allocator.refcount[b] == 1)
+        assert cb.allocator.free_blocks + evictable == cb.allocator.total_blocks
+
+
+def test_adopt_lane_prefix_shared_blocks_survive_handoff(engine):
+    """Copy-not-steal: a handed-off lane's prompt blocks may be shared via
+    the PrefixBlockCache — migration must leave them serving the source
+    pool."""
+    import jax.numpy as jnp
+    from repro.serving.batching import PagedContinuousBatcher, Request
+    src = PagedContinuousBatcher(engine, slots=2, num_blocks=32, block_size=8,
+                                 chunk=8)
+    dst = PagedContinuousBatcher(engine, slots=2, num_blocks=32, block_size=8,
+                                 chunk=8)
+    prompt = np.arange(24) % engine.cfg.vocab_size
+    held = Request(1, prompt, 5, hold=True)
+    twin = Request(2, prompt.copy(), 5)          # same prefix, decodes at src
+    src.submit(held)
+    src.submit(twin)
+    for _ in range(10):                          # prefill both; held waits
+        src.step()
+        if held.out_tokens and src._lane[0] is not None \
+                and src._lane[0].prefilled >= len(prompt):
+            break
+    assert held.out_tokens and not held.done
+    src_i = src.active.index(held)
+    shared_before = src.prefix.hits
+    moved = dst.adopt_lane(held, src, src_i)
+    assert moved and moved > 0
+    src.release_lane(src_i)
+    src.run()                                    # twin finishes on src
+    dst.run()                                    # held finishes on dst
+    assert held.done and twin.done
+    solo = engine.generate({"tokens": jnp.asarray(prompt, jnp.int32)[None]}, 5)
+    np.testing.assert_array_equal(np.asarray(held.out_tokens[:5]),
+                                  solo.tokens[0])
+    np.testing.assert_array_equal(np.asarray(twin.out_tokens[:5]),
+                                  solo.tokens[0])
+    assert src.prefix.hits >= shared_before      # prefix entries survived
+    for cb in (src, dst):
+        evictable = sum(1 for b in cb.prefix._map.values()
+                        if cb.allocator.refcount[b] == 1)
+        assert cb.allocator.free_blocks + evictable == cb.allocator.total_blocks
+
+
+def test_adopt_lane_block_starved_target_retries(engine):
+    """A migration racing admission on a block-starved target must wait (no
+    partial copy) and succeed once the target frees blocks."""
+    import jax.numpy as jnp
+    from repro.serving.batching import PagedContinuousBatcher, Request
+    src = PagedContinuousBatcher(engine, slots=1, num_blocks=32, block_size=8,
+                                 chunk=8, prefix_sharing=False)
+    dst = PagedContinuousBatcher(engine, slots=1, num_blocks=8, block_size=8,
+                                 chunk=8, prefix_sharing=False)
+    hog = Request(9, np.arange(40) % engine.cfg.vocab_size, 3)
+    dst.submit(hog)
+    dst.step()                                   # hog takes 6 of 7 blocks
+    held = Request(1, np.arange(16) % engine.cfg.vocab_size, 4, hold=True)
+    src.submit(held)
+    while not held.out_tokens:
+        src.step()
+    src_i = src.active.index(held)
+    assert dst.adopt_lane(held, src, src_i) is None   # starved: no partial copy
+    assert src.active[src_i] is held and held.hold    # source lane untouched
+    dst.run()                                         # hog retires, frees blocks
+    assert hog.done
+    moved = dst.adopt_lane(held, src, src_i)
+    assert moved and moved > 0
+    src.release_lane(src_i)
+    dst.run()
+    assert held.done
+    solo = engine.generate(
+        {"tokens": jnp.asarray(held.tokens, jnp.int32)[None]}, 4)
+    np.testing.assert_array_equal(np.asarray(held.out_tokens[:4]),
+                                  solo.tokens[0])
