@@ -31,7 +31,7 @@ from repro.core import (AutoscalerPolicy, CapacityAwareScheduler, PoolSpec,
                         QueueDepthAutoscaler, SingleSystemScheduler,
                         TargetUtilizationAutoscaler, WorkloadSpec,
                         paper_fleet, sample_workload, simulate_fleet)
-from repro.core.cost import normalized_cost_params
+from repro.core.pricing import normalized_cost_params
 
 try:
     from benchmarks.bench_util import write_csv as _write

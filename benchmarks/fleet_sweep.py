@@ -18,7 +18,7 @@ from repro.core import (AnalyticOracle, CapacityAwareScheduler, CostModel,
                         CostOptimalScheduler, PoolSpec, Query, Scheduler,
                         ThresholdScheduler, WorkloadSpec, paper_fleet,
                         sample_workload, simulate_fleet, threshold_sweep)
-from repro.core.cost import CostParams, normalized_cost_params
+from repro.core.pricing import CostParams, normalized_cost_params
 
 # Hot-path pricing: one shared CostModel with a quantized-(m, n) LRU memo.
 # Quantizing to 8-token buckets makes repeated sweep cells hit the memo at

@@ -18,7 +18,7 @@ from repro.configs import get_config
 from repro.core import (CapacityAwareScheduler, PoolSpec, ThresholdScheduler,
                         WorkloadSpec, paper_fleet, sample_workload, simulate,
                         simulate_fleet)
-from repro.core.cost import normalized_cost_params
+from repro.core.pricing import normalized_cost_params
 from repro.models import model as M
 from repro.serving.engine import InferenceEngine
 from repro.serving.router import FleetRouter

@@ -1,0 +1,106 @@
+"""Two-region global dispatch demo: spatial carbon routing + temporal
+deferral through the placement-plan IR.
+
+A us-west region (efficient hardware, dirtier solar-dipped grid) and a
+eu-north region (fast hardware, cleaner overnight-troughed grid) serve one
+workload arriving in the evening — both grids off their troughs. The
+``GlobalDispatcher`` routes interactive queries to the system with the
+lowest carbon cost right now and wraps batch-tier queries in ``DeferPlan``s
+targeting the earliest green window across all regions; the unchanged fleet
+engines hold those admissions and keep idle-inclusive accounting, so the
+printout shows what deferral actually buys at the fleet level.
+
+Run: PYTHONPATH=src python examples/multi_region.py [--queries 200]
+"""
+import argparse
+
+from repro.configs import get_config
+from repro.core import (GlobalDispatcher, PoolSpec, Query, Region,
+                        WorkloadSpec, sample_workload, simulate_fleet)
+from repro.core.carbon import CarbonProfile
+from repro.core.plan import plan_to_json
+from repro.core.systems import get_profile
+
+
+def build_regions():
+    eff, perf = get_profile("tpu-v5lite-eff"), get_profile("tpu-v5e-perf")
+    west = Region("us-west",
+                  {"eff": PoolSpec(eff, instances=2, slots=4)},
+                  carbon=CarbonProfile(mean_g_per_kwh=320.0,
+                                       trough_hour=13.0))
+    east = Region("eu-north",
+                  {"perf": PoolSpec(perf, instances=2, slots=4)},
+                  carbon=CarbonProfile(mean_g_per_kwh=120.0,
+                                       trough_hour=2.0))
+    return west, east
+
+
+def grams_of(run, regions, rids=None):
+    region_of = {f"{reg.name}/{p}": reg for reg in regions
+                 for p in reg.pools}
+    total = 0.0
+    for rec in run.records:
+        if rids is not None and rec.rid not in rids:
+            continue
+        total += region_of[rec.pool].carbon.grams(rec.energy_j, rec.t_start)
+    return total
+
+
+def main():
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--queries", type=int, default=200)
+    ap.add_argument("--arch", default="qwen2.5-3b")
+    args = ap.parse_args()
+    cfg = get_config(args.arch)
+    west, east = build_regions()
+
+    # evening arrivals: interactive chat + a batch tier (n > 256)
+    t0 = 18 * 3600.0
+    chat = sample_workload(args.queries, seed=0,
+                           spec=WorkloadSpec(mu_in=5.0, mu_out=3.5,
+                                             rate_qps=2.0))
+    chat = [Query(q.m, q.n, t0 + q.arrival_s) for q in chat]
+    batch = [Query(256, 1024, t0 + 60.0 * i) for i in range(10)]
+    qs = sorted(chat + batch, key=lambda q: q.arrival_s)
+    # chat outputs clamp at n=512, so this threshold defers ONLY the batch
+    # tier — interactive traffic keeps its arrival-time co-batching discount
+    thr = 600
+
+    # ---- 1. what the dispatcher decides -------------------------------------
+    sched = GlobalDispatcher(cfg, [west, east], defer_out_threshold=thr)
+    print("== plans at 18:00 (both regions off-trough) ==")
+    for q in (Query(64, 16, t0), Query(256, 1024, t0)):
+        plan = sched.dispatch(q, None)
+        print(f"  (m={q.m}, n={q.n}) -> {plan_to_json(plan)}")
+
+    # ---- 2. run it through the fleet engines, regions flattened -------------
+    print("\n== two-region fleet run ==")
+    run = simulate_fleet(cfg, qs, regions=[west, east],
+                         scheduler=GlobalDispatcher(cfg, [west, east],
+                                                    defer_out_threshold=thr))
+    deferred = {r.rid for r in run.records
+                if r.t_start > r.t_arrival + 3600.0}
+    print(f"  {len(run.records)} requests, {len(deferred)} deferred "
+          f">1h into a green window")
+    print(f"  fleet energy (idle-inclusive): {run.fleet_energy_j:,.0f} J, "
+          f"horizon {run.horizon_s - t0:,.0f} s")
+    print(f"  carbon at execution time: {grams_of(run, [west, east]):,.3f} g")
+
+    # ---- 3. same workload, no deferral (run-now global routing) -------------
+    now = simulate_fleet(
+        cfg, qs, regions=[west, east],
+        scheduler=GlobalDispatcher(cfg, [west, east],
+                                   defer_out_threshold=10**9))
+    print("\n== same workload, deferral disabled ==")
+    print(f"  fleet energy (idle-inclusive): {now.fleet_energy_j:,.0f} J")
+    print(f"  carbon at execution time: {grams_of(now, [west, east]):,.3f} g")
+    g_def = grams_of(run, [west, east], deferred)
+    g_now = grams_of(now, [west, east], deferred)
+    print(f"\nBatch tier alone: {g_def:.4f} g deferred vs {g_now:.4f} g "
+          f"run-now ({100 * (1 - g_def / g_now):.1f}% lower inside the green "
+          "window). Deferral trades horizon (and the idle floor burned while "
+          "waiting) for grams at execution time.")
+
+
+if __name__ == "__main__":
+    main()

@@ -1,15 +1,19 @@
-"""Scheduler purity: ``choose``/``dispatch`` must not write to ``self``.
+"""Scheduler purity: ``choose``/``dispatch``/``dispatch_rid`` must not
+write to ``self``.
 
-The PR-2 contract: pricing a query (``choose``/``dispatch``) is a pure
-function of (query, fleet state) so policies can be replayed, A/B-compared
-and priced speculatively; all state commits happen in ``observe()`` after
-the caller accepts the decision. This checker walks every class named (or
-inheriting from a base named) ``*Scheduler``, computes the set of methods
-reachable from the two entry points through ``self.<m>()`` calls — stopping
-at ``observe`` — and flags any mutation of ``self`` state inside them:
-attribute/subscript assignment, ``del``, mutating container methods
-(``append``/``update``/``heappush`` & co.), and ``heapq.*`` calls whose
-first argument is rooted at ``self``.
+The PR-2 contract: pricing a query (``choose``/``dispatch``, and since the
+vectorized engine's table path, ``dispatch_rid``) is a pure function of
+(query, fleet state) so policies can be replayed, A/B-compared and priced
+speculatively; all state commits happen in ``observe()``/``observe_rid()``
+after the caller accepts the decision. This checker walks every class named
+(or inheriting from a base named) ``*Scheduler``, computes the set of
+methods reachable from the entry points through ``self.<m>()`` calls —
+stopping at the commit methods — and flags any mutation of ``self`` state
+inside them: attribute/subscript assignment, ``del``, mutating container
+methods (``append``/``update``/``heappush`` & co.), and ``heapq.*`` calls
+whose first argument is rooted at ``self``. Plan-constructing helpers
+(``_price_terms``, ``_as_plan``, ...) are ordinary ``self.<m>()`` calls, so
+the trace follows dispatch through them automatically.
 """
 from __future__ import annotations
 
@@ -19,8 +23,8 @@ from typing import Dict, Iterable, List, Optional, Set
 from repro.analysis.findings import ERROR, RawFinding
 from repro.analysis.framework import ParsedModule, dotted_name, root_name
 
-_ENTRY_METHODS = ("choose", "dispatch")
-_COMMIT_METHOD = "observe"
+_ENTRY_METHODS = ("choose", "dispatch", "dispatch_rid")
+_COMMIT_METHODS = {"observe", "observe_rid"}
 
 _MUTATOR_METHODS = {"append", "extend", "insert", "remove", "pop", "popitem",
                     "clear", "update", "add", "discard", "setdefault", "sort",
@@ -42,7 +46,8 @@ class SchedulerPurityChecker:
     name = "scheduler-purity"
     rules = {
         "scheduler-purity": "self-mutation reachable from Scheduler."
-                            "choose/dispatch (must go through observe())",
+                            "choose/dispatch/dispatch_rid (must go through "
+                            "observe()/observe_rid())",
     }
 
     def check(self, module: ParsedModule) -> Iterable[RawFinding]:
@@ -69,7 +74,7 @@ class SchedulerPurityChecker:
                         and isinstance(sub.func.value, ast.Name) \
                         and sub.func.value.id == "self":
                     callee = sub.func.attr
-                    if callee in methods and callee != _COMMIT_METHOD \
+                    if callee in methods and callee not in _COMMIT_METHODS \
                             and callee not in reachable:
                         queue.append((callee, entry))
         for name, entry in sorted(reachable.items()):

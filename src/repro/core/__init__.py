@@ -4,13 +4,15 @@ from repro.core.systems import (SystemProfile, PROFILES, get_profile,
                                 paper_fleet, tpu_fleet, PowerState,
                                 PowerStateTable, default_power_states)
 from repro.core.perf_model import runtime, throughput, query_phases
-from repro.core.energy import (energy, energy_per_token_in, energy_per_token_out,
-                               crossover_threshold)
-from repro.core.cost import CostParams, cost, normalized_cost_params
 from repro.core.pricing import (PerfOracle, AnalyticOracle, TableOracle,
                                 CalibratedOracle, Calibration, CostModel,
                                 KernelSample, fit_calibration,
-                                default_cost_model)
+                                default_cost_model, CostParams, cost,
+                                normalized_cost_params, energy,
+                                energy_per_token_in, energy_per_token_out,
+                                crossover_threshold)
+from repro.core.plan import (Plan, PlanTerms, RunPlan, SplitPlan, DeferPlan,
+                             as_plan, plan_to_json, plan_from_json)
 from repro.core.workload import (Query, WorkloadSpec, sample_workload, alpaca_like,
                                  token_histogram, generate_arrivals,
                                  poisson_arrivals, diurnal_arrivals,
@@ -29,3 +31,5 @@ from repro.core.fleet import (FLEET_ENGINES, FleetSimulator, FleetSimResult,
                               TargetUtilizationAutoscaler,
                               QueueDepthAutoscaler)
 from repro.core.fleet_vec import VectorizedFleetSimulator
+from repro.core.region import (Region, RegionLink, PriceProfile,
+                               flatten_regions, GlobalDispatcher)

@@ -21,6 +21,7 @@ from dataclasses import dataclass
 from typing import List, Optional, Sequence
 
 from repro.configs.base import ModelConfig
+from repro.core.plan import DeferPlan, Plan, RunPlan
 from repro.core.pricing import AnalyticOracle, CostModel, CostParams
 from repro.core.scheduler import Assignment, FleetState, Scheduler
 from repro.core.systems import SystemProfile
@@ -43,6 +44,22 @@ class CarbonProfile:
         return joules / 3.6e6 * self.intensity(t_s)
 
 
+def next_green_window(carbon: CarbonProfile, t_s: float, *,
+                      below: float = 0.85, max_defer_s: float = 24 * 3600.0,
+                      step_s: float = 900.0) -> float:
+    """Earliest clock >= ``t_s`` at which ``carbon`` dips below ``below`` x
+    its mean, scanned at ``step_s`` resolution; ``t_s`` itself when no window
+    opens within ``max_defer_s`` (run now). Shared by the single-fleet
+    ``CarbonAwareScheduler`` and the multi-region ``GlobalDispatcher``."""
+    target = carbon.mean_g_per_kwh * below
+    t = t_s
+    while t < t_s + max_defer_s:
+        if carbon.intensity(t) <= target:
+            return t
+        t += step_s
+    return t_s
+
+
 class CarbonAwareScheduler(Scheduler):
     """Spatial hybrid routing + temporal deferral.
 
@@ -53,16 +70,20 @@ class CarbonAwareScheduler(Scheduler):
 
     Online use: ``dispatch(q, fleet_state)`` makes the same route-now vs
     defer decision against the snapshot clock (``fleet_state.time_s``) and
-    returns the system that is carbon-cheapest at the planned execution
+    plans onto the system that is carbon-cheapest at the planned execution
     time — deferrable work is thereby steered to the hardware that will be
-    greenest when it actually runs, while the query itself still enters the
-    queue now (the event-driven simulator owns the clock).
+    greenest when it actually runs. By default (``defer=False``) the query
+    still enters the queue now, preserving the historical single-fleet
+    behavior bit-for-bit; with ``defer=True`` dispatch wraps the placement
+    in a ``DeferPlan`` so engines hold the request out of the queue until
+    the green window actually opens (temporal shifting with idle-inclusive
+    fleet accounting).
     """
 
     def __init__(self, cfg: ModelConfig, systems: Sequence[SystemProfile],
                  carbon: CarbonProfile = CarbonProfile(), *,
                  defer_out_threshold: int = 256, defer_below: float = 0.85,
-                 max_defer_s: float = 24 * 3600.0,
+                 max_defer_s: float = 24 * 3600.0, defer: bool = False,
                  model: Optional[CostModel] = None):
         if model is None:
             model = CostModel(cfg, AnalyticOracle(), CostParams(),
@@ -83,16 +104,11 @@ class CarbonAwareScheduler(Scheduler):
         self.defer_out_threshold = defer_out_threshold
         self.defer_below = defer_below
         self.max_defer_s = max_defer_s
+        self.defer = defer
 
     def _next_green_window(self, t_s: float) -> float:
-        target = self.carbon.mean_g_per_kwh * self.defer_below
-        step = 900.0                                     # 15-min resolution
-        t = t_s
-        while t < t_s + self.max_defer_s:
-            if self.carbon.intensity(t) <= target:
-                return t
-            t += step
-        return t_s                                       # no window: run now
+        return next_green_window(self.carbon, t_s, below=self.defer_below,
+                                 max_defer_s=self.max_defer_s)
 
     def _deferrable(self, q: Query) -> bool:
         return q.n > self.defer_out_threshold
@@ -110,10 +126,18 @@ class CarbonAwareScheduler(Scheduler):
         """Workload-only decision at the query's own arrival clock."""
         return self._greenest(q, self._plan(q, q.arrival_s))
 
-    def dispatch(self, q: Query, fleet: Optional[FleetState] = None) -> SystemProfile:
-        """Online dispatch against the fleet snapshot's clock."""
+    def dispatch(self, q: Query, fleet: Optional[FleetState] = None) -> Plan:
+        """Online dispatch against the fleet snapshot's clock: a priced
+        ``RunPlan`` on the system greenest at the planned execution time —
+        wrapped in a ``DeferPlan`` holding admission until the green window
+        when deferral is enabled and the window is in the future."""
         now = fleet.time_s if fleet is not None else q.arrival_s
-        return self._greenest(q, self._plan(q, now))
+        t_exec = self._plan(q, now)
+        s = self._greenest(q, t_exec)
+        inner = RunPlan(s.name, self._price_terms(q, s, wait_s=t_exec - now))
+        if self.defer and t_exec > now:
+            return DeferPlan(until_s=t_exec, inner=inner)
+        return inner
 
     def assign(self, queries: Sequence[Query]) -> List[Assignment]:
         out = []

@@ -63,21 +63,23 @@ from typing import Dict, List, Optional, Sequence, Tuple, Union
 import numpy as np
 
 from repro.configs.base import ModelConfig
+from repro.core.plan import Plan
 from repro.core.pricing import AnalyticOracle, CostModel
 from repro.core.scheduler import (FleetState, PoolSnapshot, Scheduler,
                                   kv_blocks_needed)
+# roles are defined by the shared settlement layer (re-exported here for the
+# historical import path); both engines enqueue legs tagged with them
+from repro.core.settlement import (ROLE_DEC, ROLE_FULL, ROLE_PF,
+                                   leg_service_s, migration_charge, plan_legs,
+                                   resolve_plan)
 from repro.core.systems import SystemProfile
 from repro.core.workload import Query
 
 # event kinds: INSTANCE = batch-step/completion/wake/linger, CONTROL =
 # autoscaler tick, MIGRATE = a disaggregated request's KV handoff landing on
-# its decode pool after the priced link transit time
-ARRIVAL, INSTANCE, CONTROL, MIGRATE = 0, 1, 2, 3
-
-# request roles inside a pool: a classic request runs both phases where it
-# lands (FULL); a split request runs prefill-only on its first pool (PF),
-# migrates its KV, then decode-only on its second pool (DEC)
-ROLE_FULL, ROLE_PF, ROLE_DEC = 0, 1, 2
+# its decode pool after the priced link transit time, ADMIT = a deferred
+# request's admission clock arriving (DeferPlan.until_s)
+ARRIVAL, INSTANCE, CONTROL, MIGRATE, ADMIT = 0, 1, 2, 3, 4
 
 # instance power-machine states. AWAKE/WAKING draw idle power when unused;
 # SLEEP/OFF names match the profile's PowerStateTable rows.
@@ -786,25 +788,32 @@ class FleetSimulator:
             if kind == ARRIVAL:
                 self._arrivals_left -= 1
                 rid, q = payload
-                target = self._dispatch(q, t)
-                if isinstance(target, tuple):       # split: prefill here...
-                    pool, dst = target
+                plan = self._dispatch(q, t)
+                pool_sys, dec_sys, role, until_s = plan_legs(plan, q)
+                pool = self.pools[self._by_system[pool_sys]]
+                if dec_sys is not None:             # split: prefill here...
+                    dst = self.pools[self._by_system[dec_sys]]
                     self._check_admissible(pool,
                                            pool.spec.blocks_needed_prefill(q),
                                            q)
                     self._check_admissible(dst, dst.spec.blocks_needed(q), q)
                     rec = RequestRecord(rid, q, pool.name, t_arrival=t,
                                         pool_decode=dst.name)
-                    svc = model.split_runtime(q.m, q.n, pool.spec.system)[0]
-                    role = ROLE_PF
                 else:
-                    pool = target
                     self._check_admissible(pool, pool.spec.blocks_needed(q), q)
                     rec = RequestRecord(rid, q, pool.name, t_arrival=t)
-                    svc = model.runtime(q.m, q.n, pool.spec.system)
-                    role = ROLE_FULL
+                svc = leg_service_s(model, q, pool.spec.system, role)
                 records.append(rec)
                 pool.result.queries += 1
+                if until_s > t:                     # deferred admission
+                    heapq.heappush(events, (until_s, next(seq), ADMIT,
+                                            (pool, rec, svc, role)))
+                else:
+                    key = svc if self.queue_discipline == "sjf" else t
+                    pool.enqueue(key, next(seq), rec, svc, role)
+                    self._refill(pool, t, events, seq)
+            elif kind == ADMIT:                     # DeferPlan clock arrived
+                pool, rec, svc, role = payload
                 key = svc if self.queue_discipline == "sjf" else t
                 pool.enqueue(key, next(seq), rec, svc, role)
                 self._refill(pool, t, events, seq)
@@ -823,7 +832,7 @@ class FleetSimulator:
                 rec = payload
                 pool = self.pools[rec.pool_decode]
                 q = rec.query
-                svc = model.split_runtime(q.m, q.n, pool.spec.system)[1]
+                svc = leg_service_s(model, q, pool.spec.system, ROLE_DEC)
                 key = svc if self.queue_discipline == "sjf" else t
                 pool.enqueue(key, next(seq), rec, svc, ROLE_DEC)
                 self._refill(pool, t, events, seq)
@@ -839,29 +848,16 @@ class FleetSimulator:
                           pools={n: p.snapshot(self.model, now)
                                  for n, p in self.pools.items()})
 
-    def _dispatch(self, q: Query, now: float):
-        """Route one arrival: a ``_PoolRuntime`` for a whole-query decision,
-        or a (prefill pool, decode pool) tuple when the policy split the
-        phases (``DisaggregatedScheduler``). A tuple for a zero-decode query
-        degrades to the prefill pool — there is nothing to hand off."""
-        s = self.scheduler.dispatch(q, self._fleet_state(now))
-        if isinstance(s, tuple):
-            a, b = s
-            if q.n <= 0:
-                s = a
-            else:
-                names = [self._by_system.get(x.name) for x in (a, b)]
-                for x, name in zip((a, b), names):
-                    if name is None:
-                        raise KeyError("scheduler dispatched to unknown "
-                                       f"system {x.name!r}")
-                self.scheduler.observe(q, (a, b))
-                return self.pools[names[0]], self.pools[names[1]]
-        name = self._by_system.get(s.name)
-        if name is None:
-            raise KeyError(f"scheduler dispatched to unknown system {s.name!r}")
-        self.scheduler.observe(q, s)
-        return self.pools[name]
+    def _dispatch(self, q: Query, now: float) -> Plan:
+        """Route one arrival through the shared settlement seam: resolve the
+        policy's return into the plan IR (legacy encodings coerce behind a
+        ``DeprecationWarning``; a split for a zero-decode query degrades to
+        the prefill pool — there is nothing to hand off), validate its pool
+        names, then commit it to the scheduler via ``observe``."""
+        plan = resolve_plan(self.scheduler.dispatch(q, self._fleet_state(now)),
+                            q, self._by_system)
+        self.scheduler.observe(q, plan)
+        return plan
 
     @staticmethod
     def _check_admissible(pool: _PoolRuntime, need: int, q: Query) -> None:
@@ -893,13 +889,9 @@ class FleetSimulator:
         spec = src.spec
         bs = spec.block_size if spec.kv_blocks else 0
         dst = self.pools[rec.pool_decode]
-        nbytes, t_mig, e_mig = self.model.migration_terms(
-            q.m, spec.system, dst.spec.system, block_size=bs)
-        if not math.isfinite(t_mig):
-            raise ValueError(
-                f"split request {rec.rid} has no migration path from "
-                f"{spec.system.name!r} to {dst.spec.system.name!r} "
-                "(link_bw_gbps <= 0 on an endpoint)")
+        nbytes, t_mig, e_mig = migration_charge(
+            self.model, q.m, spec.system, dst.spec.system, block_size=bs,
+            rid=rec.rid)
         rec.energy_j += e_mig
         rec.mig_bytes = nbytes
         heapq.heappush(events, (now + t_mig, next(seq), MIGRATE, rec))
@@ -1123,7 +1115,9 @@ FLEET_ENGINES = ("event", "vectorized")
 
 
 def simulate_fleet(cfg: ModelConfig, queries: Sequence[Query],
-                   pools: Dict[str, PoolSpec], scheduler: Scheduler, *,
+                   pools: Optional[Dict[str, PoolSpec]] = None,
+                   scheduler: Optional[Scheduler] = None, *,
+                   regions: Optional[Sequence] = None,
                    queue_discipline: str = "fifo",
                    policy_name: Optional[str] = None,
                    model: Optional[CostModel] = None,
@@ -1133,11 +1127,28 @@ def simulate_fleet(cfg: ModelConfig, queries: Sequence[Query],
                    engine: str = "vectorized") -> FleetSimResult:
     """One-call wrapper: build a fleet simulator and run the workload.
 
+    Pass exactly one of ``pools`` (a flat {name: PoolSpec} fleet — the
+    historical single-region form) or ``regions`` (a sequence of
+    ``core.region.Region``: each a named fleet with its own carbon/price
+    trace). Regions are flattened into one pool mapping with
+    ``<region>/<pool>`` names (``core.region.flatten_regions``), so every
+    engine, metric, and record works unchanged; a region-aware policy
+    (``core.region.GlobalDispatcher``) can then route or defer across them
+    through the same plan IR as any single-region scheduler.
+
     ``engine="vectorized"`` (the default) is the struct-of-arrays engine
     (``core.fleet_vec``), ~20-40x faster at fleet scale;
     ``engine="event"`` is the reference one-event-at-a-time loop above.
     The engines are bit-for-bit equivalent (gated by
     tests/test_fleet_vec.py and ``benchmarks/fleet_bench.py --smoke``)."""
+    if (pools is None) == (regions is None):
+        raise ValueError("pass exactly one of pools= or regions=")
+    if scheduler is None:
+        raise TypeError("simulate_fleet requires a scheduler")
+    if regions is not None:
+        # deferred import: region builds on this module's PoolSpec
+        from repro.core.region import flatten_regions
+        pools = flatten_regions(regions)
     if engine not in FLEET_ENGINES:
         raise ValueError(f"unknown engine {engine!r}; "
                          f"choose from {FLEET_ENGINES}")

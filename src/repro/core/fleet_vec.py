@@ -37,12 +37,14 @@ from typing import Dict, List, Optional, Sequence, Tuple, Union
 import numpy as np
 
 from repro.configs.base import ModelConfig
-from repro.core.fleet import (ARRIVAL, AWAKE, CONTROL, INSTANCE, MIGRATE, OFF,
-                              ROLE_DEC, ROLE_FULL, ROLE_PF, SLEEP, WAKING,
-                              AutoscalerPolicy, FleetSimResult, PoolResult,
-                              PoolSpec)
+from repro.core.fleet import (ADMIT, ARRIVAL, AWAKE, CONTROL, INSTANCE,
+                              MIGRATE, OFF, ROLE_DEC, ROLE_FULL, ROLE_PF,
+                              SLEEP, WAKING, AutoscalerPolicy, FleetSimResult,
+                              PoolResult, PoolSpec)
+from repro.core.plan import Plan, RunPlan
 from repro.core.pricing import AnalyticOracle, CostModel
 from repro.core.scheduler import FleetState, PoolSnapshot, Scheduler
+from repro.core.settlement import migration_charge, plan_legs, resolve_plan
 from repro.core.workload import Query
 
 # integer power-machine state codes (array-friendly); <= _WAKING means
@@ -271,6 +273,12 @@ class VectorizedFleetSimulator:
                                (key, next(seq), rid, svc_s, ROLE_DEC))
                 pool.queued_service_s += svc_s
                 self._refill(pool, t, events, seq)
+            elif kind == ADMIT:                          # DeferPlan clock
+                pool, rid, svc_s, role = payload
+                key = svc_s if self.queue_discipline == "sjf" else t
+                heapq.heappush(pool.queue, (key, next(seq), rid, svc_s, role))
+                pool.queued_service_s += svc_s
+                self._refill(pool, t, events, seq)
             else:                                        # CONTROL tick
                 self._control(self.pools[payload], t, events, seq)
 
@@ -314,21 +322,31 @@ class VectorizedFleetSimulator:
     # --------------------------------------------------------------- arrival
     def _arrival(self, rid: int, t: float, events, seq) -> None:
         q = self._queries[rid]
-        target = self._dispatch(q, rid, t)
-        if isinstance(target, tuple):            # split: prefill here...
-            pool, dst = target
+        if self._pre_pool is not None:
+            # precomputed (m, n)-only decision: pool known without a plan
+            # object (the choose_batch fast path is run-now, single-pool)
+            pool = self._pool_list[self._pre_pool[rid]]
+            dst, role, until_s = None, ROLE_FULL, 0.0
+        else:
+            plan = self._plan(q, rid, t)
+            pool_sys, dec_sys, role, until_s = plan_legs(plan, q)
+            pool = self.pools[self._by_system[pool_sys]]
+            dst = (self.pools[self._by_system[dec_sys]]
+                   if dec_sys is not None else None)
+        if dst is not None:                      # split: prefill here...
             self._check_admissible(pool, int(pool.blocks_need_pf[rid]), q)
             self._check_admissible(dst, int(dst.blocks_need[rid]), q)
             self.pool2_code[rid] = dst.idx
             svc_s = float(pool.svc_pf_s[rid])
-            role = ROLE_PF
         else:
-            pool = target
             self._check_admissible(pool, int(pool.blocks_need[rid]), q)
             svc_s = float(pool.svc_s[rid])
-            role = ROLE_FULL
         self.pool_code[rid] = pool.idx
         pool.result.queries += 1
+        if until_s > t:                          # deferred admission
+            heapq.heappush(events, (until_s, next(seq), ADMIT,
+                                    (pool, rid, svc_s, role)))
+            return
         key = svc_s if self.queue_discipline == "sjf" else t
         heapq.heappush(pool.queue, (key, next(seq), rid, svc_s, role))
         pool.queued_service_s += svc_s
@@ -347,40 +365,24 @@ class VectorizedFleetSimulator:
                           pools={p.name: self._snapshot(p, now)
                                  for p in self._pool_list})
 
-    def _dispatch(self, q: Query, rid: int, now: float):
-        if self._pre_pool is not None:
-            return self._pool_list[self._pre_pool[rid]]
+    def _plan(self, q: Query, rid: int, now: float) -> Plan:
+        """Twin of ``fleet.FleetSimulator._dispatch``: same settlement seam
+        (``resolve_plan`` + ``observe``), with the engine's fast paths in
+        front — a base-dispatch policy's ``choose`` skips the (pure,
+        unobserved) snapshot and wraps directly into a ``RunPlan``; a
+        table-backed policy dispatches through ``dispatch_rid``."""
         if self._base_dispatch:
-            # base dispatch ignores fleet state: identical choice without
-            # building the (pure, unobserved) snapshot
-            s = self.scheduler.choose(q)
+            raw: object = RunPlan(self.scheduler.choose(q).name)
         elif self._rid_dispatch is not None:
-            s = self._rid_dispatch(rid, q, self._fleet_state(now))
+            raw = self._rid_dispatch(rid, q, self._fleet_state(now))
         else:
-            s = self.scheduler.dispatch(q, self._fleet_state(now))
-        if isinstance(s, tuple):        # split decision (see fleet._dispatch)
-            a, b = s
-            if q.n <= 0:
-                s = a
-            else:
-                names = [self._by_system.get(x.name) for x in (a, b)]
-                for x, name in zip((a, b), names):
-                    if name is None:
-                        raise KeyError("scheduler dispatched to unknown "
-                                       f"system {x.name!r}")
-                if self._rid_observe is not None:
-                    self._rid_observe(rid, q, (a, b))
-                else:
-                    self.scheduler.observe(q, (a, b))
-                return self.pools[names[0]], self.pools[names[1]]
-        name = self._by_system.get(s.name)
-        if name is None:
-            raise KeyError(f"scheduler dispatched to unknown system {s.name!r}")
+            raw = self.scheduler.dispatch(q, self._fleet_state(now))
+        plan = resolve_plan(raw, q, self._by_system)
         if self._rid_observe is not None:
-            self._rid_observe(rid, q, s)
+            self._rid_observe(rid, q, plan)
         else:
-            self.scheduler.observe(q, s)
-        return self.pools[name]
+            self.scheduler.observe(q, plan)
+        return plan
 
     # ------------------------------------------------------------- snapshots
     def _snapshot(self, pool: _VecPool, now: float) -> PoolSnapshot:
@@ -715,20 +717,16 @@ class VectorizedFleetSimulator:
 
     def _handoff(self, rid: int, src: _VecPool, now: float,
                  events, seq) -> None:
-        """Transcribed ``FleetSimulator._handoff``: the SAME scalar
-        ``migration_terms`` call, so the priced bytes/seconds/joules are
-        bit-identical between engines."""
+        """Transcribed ``FleetSimulator._handoff``: the SAME shared
+        ``migration_charge`` settlement call, so the priced
+        bytes/seconds/joules are bit-identical between engines."""
         q = self._queries[rid]
         spec = src.spec
         bs = spec.block_size if spec.kv_blocks else 0
         dst = self._pool_list[self.pool2_code[rid]]
-        nbytes, t_mig, e_mig = self.model.migration_terms(
-            q.m, spec.system, dst.spec.system, block_size=bs)
-        if not math.isfinite(t_mig):
-            raise ValueError(
-                f"split request {rid} has no migration path from "
-                f"{spec.system.name!r} to {dst.spec.system.name!r} "
-                "(link_bw_gbps <= 0 on an endpoint)")
+        nbytes, t_mig, e_mig = migration_charge(
+            self.model, q.m, spec.system, dst.spec.system,
+            block_size=bs, rid=rid)
         self.energy_j[rid] += e_mig
         self.mig_bytes[rid] = nbytes
         heapq.heappush(events, (now + t_mig, next(seq), MIGRATE, rid))

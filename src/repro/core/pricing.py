@@ -50,8 +50,8 @@ if TYPE_CHECKING:   # avoid a runtime cycle: carbon imports pricing
 
 @dataclass(frozen=True)
 class CostParams:
-    """Eq. 1 parameters (historically defined in ``core.cost``, which now
-    re-exports this)."""
+    """Eq. 1 parameters (historically defined in the deleted
+    ``core.cost`` module)."""
     lam: float = 1.0                     # 1.0 = pure energy (paper's Section 6)
     e_norm: float = 1.0                  # J scale
     r_norm: float = 1.0                  # s scale
@@ -741,9 +741,9 @@ _DEFAULT_CACHE = 16
 
 
 def default_cost_model(cfg: ModelConfig) -> CostModel:
-    """Process-wide analytic CostModel per config — backs the deprecation
-    shims (``core.energy.energy``, ``core.cost.cost``, ...) so legacy free
-    functions share one memo instead of re-deriving phases per call. Keyed by
+    """Process-wide analytic CostModel per config — backs the free-function
+    pricing views below (``energy``, ``cost``, ...) so they share one memo
+    instead of re-deriving phases per call. Keyed by
     the (frozen, hashable) config OBJECT: ``cfg.reduced()`` keeps ``name``,
     so a name key would hand the reduced model the full model's prices."""
     model = _DEFAULT_MODELS.get(cfg)
@@ -755,3 +755,57 @@ def default_cost_model(cfg: ModelConfig) -> CostModel:
     else:
         _DEFAULT_MODELS.move_to_end(cfg)
     return model
+
+
+# --------------------------------------------------- free-function pricing
+# Folded in from the deleted ``core.cost`` / ``core.energy`` shim modules:
+# thin free-function views over the shared per-config analytic CostModel
+# (``default_cost_model``), bit-for-bit what those modules always returned.
+# Offline analysis and the paper's Fig 1c/2c protocols use these; anything
+# on a hot path should take a CostModel directly.
+def cost(cfg: ModelConfig, m: int, n: int, s: SystemProfile,
+         cp: CostParams = CostParams(), batch: int = 1) -> float:
+    """Eq. 1: U(m, n, s) = lam * E/e_norm + (1 - lam) * R/r_norm."""
+    model = default_cost_model(cfg)
+    e = model.energy(m, n, s, batch) / cp.e_norm
+    r = model.runtime(m, n, s, batch) / cp.r_norm
+    return cp.lam * e + (1.0 - cp.lam) * r
+
+
+def normalized_cost_params(cfg: ModelConfig, ref: SystemProfile,
+                           lam: float, m: int = 128, n: int = 128) -> CostParams:
+    """CostParams normalized so E and R are O(1) on the reference system at a
+    representative query size — makes lambda behave as a true preference."""
+    model = default_cost_model(cfg)
+    return CostParams(lam=lam,
+                      e_norm=max(model.energy(m, n, ref), 1e-9),
+                      r_norm=max(model.runtime(m, n, ref), 1e-9))
+
+
+def energy(cfg: ModelConfig, m: int, n: int, s: SystemProfile,
+           batch: int = 1) -> float:
+    """E(m, n, s) in joules (Eq. 1's energy term)."""
+    return default_cost_model(cfg).energy(m, n, s, batch)
+
+
+def energy_per_token_in(cfg: ModelConfig, m: int, s: SystemProfile,
+                        n_out: int = 32) -> float:
+    """J/token while varying input size (paper Fig 1c protocol: out fixed 32)."""
+    return energy(cfg, m, n_out, s) / max(1, m)
+
+
+def energy_per_token_out(cfg: ModelConfig, n: int, s: SystemProfile,
+                         m_in: int = 32) -> float:
+    """J/token while varying output size (paper Fig 2c protocol: in fixed 32)."""
+    return energy(cfg, m_in, n, s) / max(1, n)
+
+
+def crossover_threshold(cfg: ModelConfig, eff: SystemProfile, perf: SystemProfile,
+                        *, axis: str = "in", lo: int = 1, hi: int = 4096) -> int:
+    """Smallest token count where the performance system's J/token drops below
+    the efficiency system's (the quantity the paper's T_in/T_out estimate)."""
+    fn = energy_per_token_in if axis == "in" else energy_per_token_out
+    for t in range(lo, hi + 1):
+        if fn(cfg, t, perf) < fn(cfg, t, eff):
+            return t
+    return hi

@@ -16,16 +16,24 @@ every policy at once; the default is the analytic oracle at the scheduler's
 bit-for-bit.
 
 Every scheduler exposes a uniform online API used by the discrete-event
-fleet simulator (``core/fleet.py``) and the serving router:
+fleet simulator (``core/fleet.py``), its vectorized twin, and the serving
+router:
 
-    dispatch(query, fleet_state) -> SystemProfile
+    dispatch(query, fleet_state) -> Plan       (core.plan IR)
 
 ``fleet_state`` is a ``FleetState`` snapshot (per-pool queue depths, busy
 instances, estimated wait). Workload-only policies ignore it; queue-aware
-policies price the wait in. ``dispatch`` is pure — stateful policies
+policies price the wait in. ``dispatch`` returns a placement plan —
+``RunPlan`` for a single pool, ``SplitPlan`` for a prefill/decode
+disaggregation, ``DeferPlan`` for a delayed admission — carrying the priced
+``PlanTerms`` behind the decision; callers settle it through
+``core.settlement``. (Bare ``SystemProfile`` / tuple returns from external
+subclasses are coerced there for one release behind a
+``DeprecationWarning``.) ``dispatch`` is pure — stateful policies
 (reservation heaps, round-robin counters) mutate only in ``observe``, which
-callers invoke after committing to the returned system. The legacy offline
-``assign(queries)`` path is kept for the paper's static Section 6 accounting.
+callers invoke with the resolved plan after committing to it. The legacy
+offline ``assign(queries)`` path is kept for the paper's static Section 6
+accounting.
 """
 from __future__ import annotations
 
@@ -36,9 +44,26 @@ from typing import Dict, List, Optional, Sequence, Tuple
 import numpy as np
 
 from repro.configs.base import ModelConfig
+from repro.core.plan import DeferPlan, Plan, PlanTerms, RunPlan, SplitPlan
 from repro.core.pricing import AnalyticOracle, CostModel, CostParams
 from repro.core.systems import SystemProfile
 from repro.core.workload import Query
+
+
+def _placed_pool_name(placed) -> Optional[str]:
+    """First-leg pool (system name) of a committed placement, for ``observe``
+    implementations. Accepts the plan IR and, one release behind, the legacy
+    encodings (``SystemProfile`` or a profile pair)."""
+    if isinstance(placed, DeferPlan):
+        placed = placed.inner
+    if isinstance(placed, SplitPlan):
+        return placed.pool_prefill
+    if isinstance(placed, RunPlan):
+        return placed.pool
+    if isinstance(placed, tuple) and placed:
+        placed = placed[0]
+    name = getattr(placed, "name", None)
+    return name if isinstance(name, str) else None
 
 
 @dataclass
@@ -177,16 +202,31 @@ class Scheduler:
         one pass instead of snapshotting the fleet per arrival."""
         return None
 
-    def dispatch(self, q: Query, fleet: Optional[FleetState] = None) -> SystemProfile:
-        """Online dispatch under identical queueing dynamics for every policy.
-        Default: the workload-only ``choose`` rule, ignoring fleet state.
-        Must be side-effect free; state updates belong in ``observe``."""
-        return self.choose(q)
+    def _price_terms(self, q: Query, s: SystemProfile, *,
+                     wait_s: float = 0.0,
+                     cost: Optional[float] = None) -> PlanTerms:
+        """Priced ``PlanTerms`` for running ``q`` on ``s`` (pure: reads the
+        memoized ``CostModel`` only). Pass ``cost=`` when the Eq. 1 scalar
+        was already computed during the candidate scan."""
+        if cost is None:
+            cost = self.model.cost(q.m, q.n, s, wait_s=wait_s)
+        return PlanTerms(energy_j=self.model.energy(q.m, q.n, s),
+                         runtime_s=self.model.runtime(q.m, q.n, s),
+                         wait_s=wait_s, cost=cost)
 
-    def observe(self, q: Query, system: SystemProfile) -> None:
-        """Commit hook: the caller routed ``q`` to ``system``. Stateful
-        policies (reservation heaps, counters) update internal state here —
-        never in ``choose``/``dispatch``."""
+    def dispatch(self, q: Query, fleet: Optional[FleetState] = None) -> Plan:
+        """Online dispatch under identical queueing dynamics for every policy.
+        Default: the workload-only ``choose`` rule, ignoring fleet state,
+        wrapped in a priced ``RunPlan``. Must be side-effect free; state
+        updates belong in ``observe``."""
+        s = self.choose(q)
+        return RunPlan(s.name, self._price_terms(q, s))
+
+    def observe(self, q: Query, placed) -> None:
+        """Commit hook: the caller settled ``q`` onto ``placed`` (a resolved
+        ``Plan``; legacy callers may still pass a ``SystemProfile``).
+        Stateful policies (reservation heaps, counters) update internal
+        state here — never in ``choose``/``dispatch``."""
 
     def assign(self, queries: Sequence[Query]) -> List[Assignment]:
         out = []
@@ -275,25 +315,28 @@ class CapacityAwareScheduler(Scheduler):
             heapq.heapify(p.free_at)
         self._rid_cost: Dict[str, "np.ndarray"] = {}
         self._rid_runtime_s: Dict[str, "np.ndarray"] = {}
+        self._rid_energy_j: Dict[str, "np.ndarray"] = {}
 
     def prepare_batch(self, m, n) -> None:
-        """Precompute per-system wait-free cost and runtime tables over a
-        whole workload's (m, n) arrays, enabling ``dispatch_rid``. Called by
-        the vectorized fleet engine before its event loop."""
+        """Precompute per-system wait-free cost, runtime, and energy tables
+        over a whole workload's (m, n) arrays, enabling ``dispatch_rid``.
+        Called by the vectorized fleet engine before its event loop."""
         for s in self.systems:
             self._rid_cost[s.name] = self.model.cost_batch(m, n, s)
             self._rid_runtime_s[s.name] = self.model.runtime_batch(m, n, s)
+            self._rid_energy_j[s.name] = self.model.energy_batch(m, n, s)
 
     def dispatch_rid(self, rid: int, q: Query,
-                     fleet: Optional[FleetState]) -> SystemProfile:
+                     fleet: Optional[FleetState]) -> Plan:
         """Table-backed ``dispatch``: identical decision (the scalar path's
         ``cost(..., wait_s=w)`` equals the wait-free cost plus the wait term,
         in the same float association), with all per-query pricing read from
         the ``prepare_batch`` tables instead of the scalar memo."""
         if fleet is None:
-            return self.choose(q)
+            s = self.choose(q)
+            return RunPlan(s.name, self._price_terms(q, s))
         cp = self.cp
-        best, best_c = None, float("inf")
+        best, best_c, best_wait = None, float("inf"), 0.0
         for s in self.systems:
             snap = fleet.for_system(s)
             wait_s = snap.est_wait_s if snap is not None else 0.0
@@ -304,8 +347,11 @@ class CapacityAwareScheduler(Scheduler):
             if wait_s:
                 c = c + (1.0 - cp.lam) * wait_s / cp.r_norm
             if c < best_c:
-                best, best_c = s, c
-        return best
+                best, best_c, best_wait = s, c, wait_s
+        terms = PlanTerms(energy_j=float(self._rid_energy_j[best.name][rid]),
+                          runtime_s=float(self._rid_runtime_s[best.name][rid]),
+                          wait_s=best_wait, cost=float(best_c))
+        return RunPlan(best.name, terms)
 
     def _price(self, q: Query) -> Tuple[_Pool, float, float, float]:
         """Pure pricing against the internal reservation heaps:
@@ -332,26 +378,26 @@ class CapacityAwareScheduler(Scheduler):
         """Online single-query decision. Pure: see ``observe``."""
         return self._price(q)[0].system
 
-    def observe(self, q: Query, system: SystemProfile) -> None:
-        """Book the committed system's earliest-free instance."""
-        pool = self.pools.get(system.name)
+    def observe(self, q: Query, placed) -> None:
+        """Book the committed placement's earliest-free instance."""
+        pool = self.pools.get(_placed_pool_name(placed))
         if pool is None:
             return
         start = max(q.arrival_s, pool.free_at[0])
         heapq.heapreplace(pool.free_at,
-                          start + self.model.runtime(q.m, q.n, system))
+                          start + self.model.runtime(q.m, q.n, pool.system))
 
-    def observe_rid(self, rid: int, q: Query, system: SystemProfile) -> None:
+    def observe_rid(self, rid: int, q: Query, placed) -> None:
         """``observe`` with the booked runtime read from the ``prepare_batch``
         table (bit-identical to the scalar ``model.runtime``)."""
-        pool = self.pools.get(system.name)
+        pool = self.pools.get(_placed_pool_name(placed))
         if pool is None:
             return
         start = max(q.arrival_s, pool.free_at[0])
         heapq.heapreplace(pool.free_at,
-                          start + self._rid_runtime_s[system.name][rid])
+                          start + self._rid_runtime_s[pool.system.name][rid])
 
-    def dispatch(self, q: Query, fleet: Optional[FleetState] = None) -> SystemProfile:
+    def dispatch(self, q: Query, fleet: Optional[FleetState] = None) -> Plan:
         """Queue-aware dispatch: price each pool's *observed* estimated wait
         (from the fleet snapshot) into the Eq. 1 cost, plus the KV-memory
         pressure term when the pool reports block occupancy — a pool with
@@ -364,8 +410,9 @@ class CapacityAwareScheduler(Scheduler):
         Without a snapshot the internal reservation heap is read (not
         written) for the wait."""
         if fleet is None:
-            return self.choose(q)
-        best, best_c = None, float("inf")
+            s = self.choose(q)
+            return RunPlan(s.name, self._price_terms(q, s))
+        best, best_c, best_wait = None, float("inf"), 0.0
         for s in self.systems:
             snap = fleet.for_system(s)
             wait = snap.est_wait_s if snap is not None else 0.0
@@ -374,8 +421,10 @@ class CapacityAwareScheduler(Scheduler):
                                         self.model.runtime(q.m, q.n, s))
             c = self.model.cost(q.m, q.n, s, wait_s=wait)
             if c < best_c:
-                best, best_c = s, c
-        return best
+                best, best_c, best_wait = s, c, wait
+        return RunPlan(best.name,
+                       self._price_terms(q, best, wait_s=best_wait,
+                                         cost=best_c))
 
     def assign(self, queries: Sequence[Query]) -> List[Assignment]:
         return [self.reserve(q)
@@ -392,11 +441,12 @@ class DisaggregatedScheduler(Scheduler):
     pricing to ``CapacityAwareScheduler``) AND every ordered pool pair
     (a, b): prefill energy+runtime on ``a``, the priced KV-block migration
     (``CostModel.migration_terms``), decode energy+runtime on ``b``, and both
-    queues' estimated waits. ``dispatch`` returns a ``SystemProfile`` for a
-    single-pool decision or an ``(a, b)`` tuple for a split — callers that
-    support handoff (both fleet engines, the serving router) understand the
-    tuple; ``choose``/``assign`` stay single-pool (a split is only priceable
-    against queue state, and the offline path has none).
+    queues' estimated waits. ``dispatch`` returns a ``RunPlan`` for a
+    single-pool decision or a ``SplitPlan`` for a split — callers that
+    support handoff (both fleet engines, the serving router) settle either
+    through ``core.settlement``; ``choose``/``assign`` stay single-pool (a
+    split is only priceable against queue state, and the offline path has
+    none).
 
     Pairs are only considered when the query decodes (n > 0) and both
     endpoints advertise a positive ``link_bw_gbps``; zero-decode queries
@@ -412,6 +462,7 @@ class DisaggregatedScheduler(Scheduler):
         super().__init__(cfg, systems, cp, model=model)
         self._rid_cost: Dict[str, "np.ndarray"] = {}
         self._rid_runtime_s: Dict[str, "np.ndarray"] = {}
+        self._rid_energy_j: Dict[str, "np.ndarray"] = {}
         self._rid_e_pf_j: Dict[str, "np.ndarray"] = {}
         self._rid_e_dec_j: Dict[str, "np.ndarray"] = {}
         self._rid_r_pf_s: Dict[str, "np.ndarray"] = {}
@@ -453,10 +504,28 @@ class DisaggregatedScheduler(Scheduler):
             wait_s += snap_b.mem_wait_s(q.m, q.n, r_dec_s)
         return wait_s
 
-    def dispatch(self, q: Query, fleet: Optional[FleetState] = None):
+    def _as_plan(self, q: Query, best, best_c: float, best_wait: float,
+                 best_split) -> Plan:
+        """Wrap the winning candidate of a dispatch scan: a ``SplitPlan``
+        with the pair's priced components when a pair won, else a priced
+        ``RunPlan``. Pure — called from ``dispatch``/``dispatch_rid``."""
+        if best_split is not None:
+            a, b = best
+            nbytes, mig_s, mig_j, e_pf_j, r_pf_s, e_dec_j, r_dec_s = best_split
+            terms = PlanTerms(energy_j=e_pf_j + mig_j + e_dec_j,
+                              runtime_s=r_pf_s + mig_s + r_dec_s,
+                              wait_s=best_wait, cost=best_c)
+            return SplitPlan(a.name, b.name, mig_bytes=nbytes, terms=terms)
+        return RunPlan(best.name,
+                       self._price_terms(q, best, wait_s=best_wait,
+                                         cost=best_c))
+
+    def dispatch(self, q: Query, fleet: Optional[FleetState] = None) -> Plan:
         if fleet is None:
-            return self.choose(q)
-        best, best_c = None, float("inf")
+            s = self.choose(q)
+            return RunPlan(s.name, self._price_terms(q, s))
+        best, best_c, best_wait = None, float("inf"), 0.0
+        best_split = None
         for s in self.systems:
             snap = fleet.for_system(s)
             wait_s = snap.est_wait_s if snap is not None else 0.0
@@ -465,9 +534,9 @@ class DisaggregatedScheduler(Scheduler):
                                           self.model.runtime(q.m, q.n, s))
             c = self.model.cost(q.m, q.n, s, wait_s=wait_s)
             if c < best_c:
-                best, best_c = s, c
+                best, best_c, best_wait = s, c, wait_s
         if q.n <= 0:
-            return best
+            return self._as_plan(q, best, best_c, best_wait, None)
         for a in self.systems:
             for b in self.systems:
                 if a is b or min(a.link_bw_gbps, b.link_bw_gbps) <= 0.0:
@@ -479,14 +548,16 @@ class DisaggregatedScheduler(Scheduler):
                 r_pf_s, _ = self.model.split_runtime(q.m, q.n, a)
                 _, r_dec_s = self.model.split_runtime(q.m, q.n, b)
                 bs = snap_a.block_size if snap_a is not None else 0
-                _, mig_s, mig_j = self.model.migration_terms(
+                nbytes, mig_s, mig_j = self.model.migration_terms(
                     q.m, a, b, block_size=bs)
                 wait_s = self._pair_waits(q, snap_a, snap_b, r_pf_s, r_dec_s)
                 c = self._pair_cost(e_pf_j, r_pf_s, e_dec_j, r_dec_s,
                                     mig_s, mig_j, wait_s)
                 if c < best_c:
-                    best, best_c = (a, b), c
-        return best
+                    best, best_c, best_wait = (a, b), c, wait_s
+                    best_split = (nbytes, mig_s, mig_j,
+                                  e_pf_j, r_pf_s, e_dec_j, r_dec_s)
+        return self._as_plan(q, best, best_c, best_wait, best_split)
 
     # ------------------------------------------------------ table-backed path
     def prepare_batch(self, m, n) -> None:
@@ -495,6 +566,7 @@ class DisaggregatedScheduler(Scheduler):
         for s in self.systems:
             self._rid_cost[s.name] = self.model.cost_batch(m, n, s)
             self._rid_runtime_s[s.name] = self.model.runtime_batch(m, n, s)
+            self._rid_energy_j[s.name] = self.model.energy_batch(m, n, s)
             e_pf_j, e_dec_j = self.model.split_energy_batch(m, n, s)
             r_pf_s, r_dec_s = self.model.split_runtime_batch(m, n, s)
             self._rid_e_pf_j[s.name] = e_pf_j
@@ -503,15 +575,17 @@ class DisaggregatedScheduler(Scheduler):
             self._rid_r_dec_s[s.name] = r_dec_s
 
     def dispatch_rid(self, rid: int, q: Query,
-                     fleet: Optional[FleetState]):
+                     fleet: Optional[FleetState]) -> Plan:
         """``dispatch`` with every per-query price read from the
         ``prepare_batch`` tables (elementwise bit-identical to the scalar
         calls); the migration terms and the candidate scan are the same
         scalar code in the same order."""
         if fleet is None:
-            return self.choose(q)
+            s = self.choose(q)
+            return RunPlan(s.name, self._price_terms(q, s))
         cp = self.cp
-        best, best_c = None, float("inf")
+        best, best_c, best_wait = None, float("inf"), 0.0
+        best_split = None
         for s in self.systems:
             snap = fleet.for_system(s)
             wait_s = snap.est_wait_s if snap is not None else 0.0
@@ -522,9 +596,9 @@ class DisaggregatedScheduler(Scheduler):
             if wait_s:
                 c = c + (1.0 - cp.lam) * wait_s / cp.r_norm
             if c < best_c:
-                best, best_c = s, c
+                best, best_c, best_wait = s, c, wait_s
         if q.n <= 0:
-            return best
+            return self._as_plan_rid(rid, q, best, best_c, best_wait, None)
         for a in self.systems:
             for b in self.systems:
                 if a is b or min(a.link_bw_gbps, b.link_bw_gbps) <= 0.0:
@@ -536,14 +610,27 @@ class DisaggregatedScheduler(Scheduler):
                 r_pf_s = float(self._rid_r_pf_s[a.name][rid])
                 r_dec_s = float(self._rid_r_dec_s[b.name][rid])
                 bs = snap_a.block_size if snap_a is not None else 0
-                _, mig_s, mig_j = self.model.migration_terms(
+                nbytes, mig_s, mig_j = self.model.migration_terms(
                     q.m, a, b, block_size=bs)
                 wait_s = self._pair_waits(q, snap_a, snap_b, r_pf_s, r_dec_s)
                 c = self._pair_cost(e_pf_j, r_pf_s, e_dec_j, r_dec_s,
                                     mig_s, mig_j, wait_s)
                 if c < best_c:
-                    best, best_c = (a, b), c
-        return best
+                    best, best_c, best_wait = (a, b), c, wait_s
+                    best_split = (nbytes, mig_s, mig_j,
+                                  e_pf_j, r_pf_s, e_dec_j, r_dec_s)
+        return self._as_plan_rid(rid, q, best, best_c, best_wait, best_split)
+
+    def _as_plan_rid(self, rid: int, q: Query, best, best_c: float,
+                     best_wait: float, best_split) -> Plan:
+        """``_as_plan`` with single-pool terms read from the ``prepare_batch``
+        tables instead of the scalar memo. Pure."""
+        if best_split is not None:
+            return self._as_plan(q, best, best_c, best_wait, best_split)
+        terms = PlanTerms(energy_j=float(self._rid_energy_j[best.name][rid]),
+                          runtime_s=float(self._rid_runtime_s[best.name][rid]),
+                          wait_s=best_wait, cost=best_c)
+        return RunPlan(best.name, terms)
 
 
 # ------------------------------------------------------------------ baselines
@@ -574,5 +661,5 @@ class RoundRobinScheduler(Scheduler):
     def choose(self, q: Query) -> SystemProfile:
         return self.systems[self._i % len(self.systems)]
 
-    def observe(self, q: Query, system: SystemProfile) -> None:
+    def observe(self, q: Query, placed) -> None:
         self._i += 1

@@ -24,10 +24,13 @@ from typing import Dict, List, Optional, Sequence
 import numpy as np
 
 from repro.configs.base import ModelConfig
+from repro.core.plan import DeferPlan, SplitPlan
 from repro.core.pricing import CostModel, CostParams, PerfOracle
 from repro.core.scheduler import (CapacityAwareScheduler, CostOptimalScheduler,
                                   DisaggregatedScheduler, FleetState,
                                   PoolSnapshot, Scheduler, ThresholdScheduler)
+from repro.core.settlement import (reconcile_deltas, reconcile_split_deltas,
+                                   resolve_plan, route_bookings)
 from repro.core.systems import SystemProfile
 from repro.core.workload import Query
 from repro.serving.batching import (ContinuousBatcher, PagedContinuousBatcher,
@@ -101,6 +104,7 @@ class FleetRouter:
         else:
             raise ValueError(policy)
         self._name_of = {s.name: n for n, s in pools.items()}
+        self._system_of = {s.name: s for s in pools.values()}
         if len(self._name_of) != len(pools):
             raise ValueError("pools must use distinct SystemProfile names: "
                              "dispatch maps a chosen system back to its pool "
@@ -209,76 +213,50 @@ class FleetRouter:
         fleet = None
         if self.batchers and type(self.scheduler).dispatch is not Scheduler.dispatch:
             fleet = self._fleet_state(arrival_s)
-        sys = self.scheduler.dispatch(q, fleet)
-        self.scheduler.observe(q, sys)
+        plan = resolve_plan(self.scheduler.dispatch(q, fleet), q, self._name_of)
+        self.scheduler.observe(q, plan)
         self._last_split = None
-        if isinstance(sys, tuple):            # disaggregated: (prefill, decode)
-            return self._route_split(q, sys[0], sys[1])
-        name = self._name_of[sys.name]
-        st = self.stats[name]
-        st.queries += 1
-        e = self.model.energy(m, expected_n, sys)
-        r = self.model.runtime(m, expected_n, sys)
-        st.energy_j += e
-        st.runtime_s += r
-        st.tokens += m + expected_n
-        st.expected_energy_j += e
-        st.expected_runtime_s += r
-        st.expected_tokens += m + expected_n
-        return name
-
-    def _route_split(self, q: Query, sys_a: SystemProfile,
-                     sys_b: SystemProfile) -> str:
-        """Book a prefill-here/decode-there plan: prefill + priced KV
-        migration on the prefill pool, decode on the decode pool — the same
-        attribution the fleet simulator's ``_handoff`` uses. Returns the
-        prefill pool's name (where the request is submitted); the decode
-        pool is stashed in ``_last_split`` for ``submit`` to arm the
-        handoff."""
-        name_a = self._name_of[sys_a.name]
-        name_b = self._name_of[sys_b.name]
-        self._last_split = name_b
-        bs = getattr(self.batchers.get(name_a), "block_size", 0)
-        e_pf, _ = self.model.split_energy(q.m, q.n, sys_a)
-        _, e_dec = self.model.split_energy(q.m, q.n, sys_b)
-        r_pf, _ = self.model.split_runtime(q.m, q.n, sys_a)
-        _, r_dec = self.model.split_runtime(q.m, q.n, sys_b)
-        _, mig_s, mig_j = self.model.migration_terms(q.m, sys_a, sys_b,
-                                                     block_size=bs)
-        st_a, st_b = self.stats[name_a], self.stats[name_b]
-        st_a.queries += 1                     # query counted at its prefill pool
-        st_a.energy_j += e_pf + mig_j
-        st_a.runtime_s += r_pf + mig_s
-        st_a.tokens += q.m
-        st_a.expected_energy_j += e_pf + mig_j
-        st_a.expected_runtime_s += r_pf + mig_s
-        st_a.expected_tokens += q.m
-        st_b.energy_j += e_dec
-        st_b.runtime_s += r_dec
-        st_b.tokens += q.n
-        st_b.expected_energy_j += e_dec
-        st_b.expected_runtime_s += r_dec
-        st_b.expected_tokens += q.n
+        if isinstance(plan, DeferPlan):
+            # live serving cannot time-shift an in-flight request: the inner
+            # placement runs immediately (the defer window is a simulation /
+            # global-dispatch concern)
+            plan = plan.inner
+        if isinstance(plan, SplitPlan):
+            name_a = self._name_of[plan.pool_prefill]
+            self._last_split = self._name_of[plan.pool_decode]
+            bs = getattr(self.batchers.get(name_a), "block_size", 0)
+        else:
+            name_a = self._name_of[plan.pool]
+            bs = 0
+        for b in route_bookings(self.model, plan, q, self._system_of,
+                                block_size=bs):
+            st = self.stats[self._name_of[b.pool]]
+            st.queries += b.queries
+            st.energy_j += b.energy_j
+            st.runtime_s += b.runtime_s
+            st.tokens += b.tokens
+            st.expected_energy_j += b.energy_j
+            st.expected_runtime_s += b.runtime_s
+            st.expected_tokens += b.tokens
         return name_a
 
     def _reconcile_split(self, name_a: str, name_b: str, m: int,
                          expected_n: int, actual_n: int) -> None:
         """Split-plan analogue of ``_reconcile``: re-book each phase term on
-        its own pool at the emitted token count. Migration depends only on
-        ``m`` and needs no adjustment."""
+        its own pool at the emitted token count (deltas from
+        ``core.settlement``). Migration depends only on ``m`` and needs no
+        adjustment."""
         if actual_n == expected_n:
             return
-        sys_a, sys_b = self.pools[name_a], self.pools[name_b]
+        (da_e, da_r), (db_e, db_r), dn = reconcile_split_deltas(
+            self.model, m, expected_n, actual_n,
+            self.pools[name_a], self.pools[name_b])
         st_a, st_b = self.stats[name_a], self.stats[name_b]
-        st_a.energy_j += (self.model.split_energy(m, actual_n, sys_a)[0]
-                          - self.model.split_energy(m, expected_n, sys_a)[0])
-        st_a.runtime_s += (self.model.split_runtime(m, actual_n, sys_a)[0]
-                           - self.model.split_runtime(m, expected_n, sys_a)[0])
-        st_b.energy_j += (self.model.split_energy(m, actual_n, sys_b)[1]
-                          - self.model.split_energy(m, expected_n, sys_b)[1])
-        st_b.runtime_s += (self.model.split_runtime(m, actual_n, sys_b)[1]
-                           - self.model.split_runtime(m, expected_n, sys_b)[1])
-        st_b.tokens += actual_n - expected_n
+        st_a.energy_j += da_e
+        st_a.runtime_s += da_r
+        st_b.energy_j += db_e
+        st_b.runtime_s += db_r
+        st_b.tokens += dn
 
     def _reconcile(self, name: str, m: int, expected_n: int,
                    actual_n: int) -> None:
@@ -287,13 +265,12 @@ class FleetRouter:
         view)."""
         if actual_n == expected_n:
             return
-        sysp = self.pools[name]
+        d_e, d_r, dn = reconcile_deltas(self.model, m, expected_n, actual_n,
+                                        self.pools[name])
         st = self.stats[name]
-        st.energy_j += (self.model.energy(m, actual_n, sysp)
-                        - self.model.energy(m, expected_n, sysp))
-        st.runtime_s += (self.model.runtime(m, actual_n, sysp)
-                         - self.model.runtime(m, expected_n, sysp))
-        st.tokens += actual_n - expected_n
+        st.energy_j += d_e
+        st.runtime_s += d_r
+        st.tokens += dn
 
     def submit(self, tokens: np.ndarray, max_new_tokens: int,
                arrival_s: float = 0.0,

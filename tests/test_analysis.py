@@ -258,6 +258,38 @@ def test_purity_flags_mutation_via_helper():
     assert "scheduler-purity" in rules_of(fs)
 
 
+def test_purity_flags_write_in_dispatch_rid():
+    fs = lint("""
+        class TableScheduler:
+            def dispatch_rid(self, rid, q, fleet):
+                self.last_rid = rid
+                return "perf"
+    """)
+    assert "scheduler-purity" in rules_of(fs)
+
+
+def test_purity_flags_mutation_via_plan_helper():
+    # dispatch -> plan-constructing helper -> mutation: the trace must
+    # follow the helper chain
+    fs = lint("""
+        class PlanScheduler:
+            def dispatch(self, q, fleet=None):
+                s = self.choose(q)
+                return self._as_plan(q, s)
+
+            def choose(self, q):
+                return self.systems[0]
+
+            def _as_plan(self, q, s):
+                return self._price(q, s)
+
+            def _price(self, q, s):
+                self.priced += 1
+                return (s.name, self.priced)
+    """)
+    assert "scheduler-purity" in rules_of(fs)
+
+
 # ================================================= scheduler-purity: negatives
 def test_purity_accepts_observe_commit():
     fs = lint("""
@@ -267,6 +299,21 @@ def test_purity_accepts_observe_commit():
 
             def observe(self, q, name):
                 self.history.append((q, name))
+    """)
+    assert fs == []
+
+
+def test_purity_accepts_observe_rid_commit():
+    fs = lint("""
+        class TableScheduler:
+            def dispatch_rid(self, rid, q, fleet):
+                return self._score(rid)
+
+            def _score(self, rid):
+                return self.table[rid]
+
+            def observe_rid(self, rid, q, placed):
+                self.free_at[placed] = self.table[rid]
     """)
     assert fs == []
 

@@ -14,7 +14,7 @@ from repro.core import (CapacityAwareScheduler, FleetSimulator, FleetState,
                         TargetUtilizationAutoscaler, ThresholdScheduler,
                         WorkloadSpec, default_power_states, paper_fleet,
                         sample_workload, simulate_fleet)
-from repro.core.cost import normalized_cost_params
+from repro.core.pricing import normalized_cost_params
 from repro.core.fleet import SLEEP, _Resident
 
 CFG = get_config("deepseek-7b")
@@ -261,7 +261,7 @@ def test_dispatch_prices_cold_pool_honestly():
         "cold": PoolSnapshot(system=cold, awake_instances=0,
                              asleep_instances=1, est_wait_s=wake_s,
                              wake_delay_s=wake_s)})
-    assert sched.dispatch(Query(16, 16), fleet).name == warm.name
+    assert sched.dispatch(Query(16, 16), fleet).pool == warm.name
 
 
 def test_router_mirrors_awake_count_view():

@@ -75,13 +75,13 @@ def test_carbon_dispatch_uses_snapshot_clock():
     assert cp.intensity(t_green) < cp.intensity(peak)
     want = min([EFF, PERF],
                key=lambda s: sched.model.grams(batch_q.m, batch_q.n, s, t_green))
-    assert sched.dispatch(batch_q, state).name == want.name
+    assert sched.dispatch(batch_q, state).pool == want.name
     # interactive: priced at the snapshot clock itself
     want_now = min([EFF, PERF],
                    key=lambda s: sched.model.grams(chat_q.m, chat_q.n, s, peak))
-    assert sched.dispatch(chat_q, state).name == want_now.name
+    assert sched.dispatch(chat_q, state).pool == want_now.name
     # without a snapshot the query's own arrival clock is used
-    assert sched.dispatch(chat_q).name == min(
+    assert sched.dispatch(chat_q).pool == min(
         [EFF, PERF], key=lambda s: sched.model.grams(
             chat_q.m, chat_q.n, s, chat_q.arrival_s)).name
 

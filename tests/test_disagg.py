@@ -10,6 +10,7 @@ import pytest
 from repro.configs import get_config
 from repro.core import (DisaggregatedScheduler, PoolSpec, Query, WorkloadSpec,
                         sample_workload, simulate_fleet)
+from repro.core.plan import RunPlan, SplitPlan
 from repro.core.pricing import CostModel, kv_bytes_per_token
 from repro.core.scheduler import (FleetState, PoolSnapshot, Scheduler,
                                   kv_blocks_needed)
@@ -63,26 +64,26 @@ def test_migration_seconds_inf_without_link():
 
 
 # --------------------------------------------------------------- scheduler
-def test_dispatch_returns_pair_for_prompt_heavy_query():
+def test_dispatch_returns_split_plan_for_prompt_heavy_query():
     eff, perf = _systems()
     sched = DisaggregatedScheduler(CFG, [eff, perf])
     got = sched.dispatch(Query(250, 50, 0.0), _idle_fleet(eff, perf))
-    assert isinstance(got, tuple) and got == (perf, eff)
+    assert isinstance(got, SplitPlan)
+    assert (got.pool_prefill, got.pool_decode) == (perf.name, eff.name)
+    assert got.mig_bytes > 0 and got.terms is not None
     # workload-only fallback (no queue state) never splits
-    assert isinstance(sched.dispatch(Query(250, 50, 0.0), None),
-                      SystemProfile)
+    assert isinstance(sched.dispatch(Query(250, 50, 0.0), None), RunPlan)
 
 
 def test_dispatch_never_pairs_without_decode_or_link():
     eff, perf = _systems()
     sched = DisaggregatedScheduler(CFG, [eff, perf])
     fleet = _idle_fleet(eff, perf)
-    assert isinstance(sched.dispatch(Query(250, 0, 0.0), fleet),
-                      SystemProfile)
+    assert isinstance(sched.dispatch(Query(250, 0, 0.0), fleet), RunPlan)
     eff0, perf0 = _systems(link=0.0)
     sched0 = DisaggregatedScheduler(CFG, [eff0, perf0])
     got = sched0.dispatch(Query(250, 50, 0.0), _idle_fleet(eff0, perf0))
-    assert isinstance(got, SystemProfile)   # zero link: no NaN, no pair
+    assert isinstance(got, RunPlan)         # zero link: no NaN, no split
 
 
 def test_dispatch_rid_matches_scalar_dispatch():
@@ -142,8 +143,9 @@ def test_no_link_means_no_splits_and_no_migration():
 
 
 class _AlwaysPair(Scheduler):
-    """Degenerate policy: returns a split plan for EVERY query — the engines
-    must degrade n<=0 tuples to single-pool prefill with no handoff."""
+    """Degenerate LEGACY policy: returns a raw (a, b) profile tuple for EVERY
+    query — exercises the one-release deprecation shim (``as_plan``) AND the
+    engines' n<=0 degradation to single-pool prefill with no handoff."""
 
     def choose(self, q):
         return self.systems[0]

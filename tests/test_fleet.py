@@ -12,7 +12,7 @@ from repro.core import (CapacityAwareScheduler, CostOptimalScheduler,
                         energy, generate_arrivals, mmpp_arrivals, paper_fleet,
                         poisson_arrivals, runtime, sample_workload, simulate,
                         simulate_fleet, threshold_sweep, trace_arrivals)
-from repro.core.cost import normalized_cost_params
+from repro.core.pricing import normalized_cost_params
 
 CFG = get_config("deepseek-7b")
 EFF, PERF = paper_fleet()
@@ -198,14 +198,14 @@ def test_capacity_aware_dispatch_reads_fleet_state():
         "perf": PoolSnapshot(system=PERF, est_wait_s=0.0)}))
     # small query, no queues: the faster system wins under pure latency
     fast = min((EFF, PERF), key=lambda s: runtime(CFG, q.m, q.n, s))
-    assert idle_choice.name == fast.name
+    assert idle_choice.pool == fast.name
     # back up only the fast pool: the query must spill to the other one
     one_sided = FleetState(pools={
         fast.name: PoolSnapshot(system=fast, est_wait_s=1e4, queue_len=50),
         (PERF if fast is EFF else EFF).name: PoolSnapshot(
             system=PERF if fast is EFF else EFF, est_wait_s=0.0)})
     spilled = sched.dispatch(q, one_sided)
-    assert spilled.name != fast.name
+    assert spilled.pool != fast.name
 
 
 # ----------------------------------------------------------- KV block capacity
@@ -268,14 +268,14 @@ def test_snapshot_reports_block_state_and_dispatch_prices_it():
                                 block_size=16),
         slow.name: PoolSnapshot(system=slow, free_blocks=32, total_blocks=32,
                                 block_size=16)})
-    assert sched.dispatch(q, starved).name == slow.name
+    assert sched.dispatch(q, starved).pool == slow.name
     # with blocks available the fast pool wins again
     roomy = FleetState(pools={
         fast.name: PoolSnapshot(system=fast, free_blocks=32, total_blocks=32,
                                 block_size=16),
         slow.name: PoolSnapshot(system=slow, free_blocks=32, total_blocks=32,
                                 block_size=16)})
-    assert sched.dispatch(q, roomy).name == fast.name
+    assert sched.dispatch(q, roomy).pool == fast.name
     # and the simulator populates the fields end to end, in PER-INSTANCE
     # admission terms: a request lands on one instance, so 2 instances with
     # 64 blocks each report 64 free, not 128 — otherwise a query too big for

@@ -1,0 +1,147 @@
+"""Plan-IR conformance: every scheduler's dispatch/dispatch_rid must return
+well-formed, finitely priced plans; the IR must JSON round-trip; the legacy
+SystemProfile/tuple encodings must still coerce (one release, warning)."""
+import json
+import math
+
+import numpy as np
+import pytest
+
+from repro.configs import get_config
+from repro.core import (CapacityAwareScheduler, CostOptimalScheduler,
+                        DisaggregatedScheduler, FleetState, GlobalDispatcher,
+                        PoolSnapshot, PoolSpec, Query, Region,
+                        RoundRobinScheduler, SingleSystemScheduler,
+                        ThresholdScheduler, WorkloadSpec, sample_workload)
+from repro.core.carbon import CarbonAwareScheduler
+from repro.core.plan import (DeferPlan, PlanTerms, RunPlan, SplitPlan,
+                             as_plan, plan_from_json, plan_to_json)
+from repro.core.settlement import resolve_plan
+from repro.core.systems import SystemProfile, paper_fleet
+
+CFG = get_config("qwen2.5-3b")
+EFF, PERF = paper_fleet()
+LINKED_EFF = SystemProfile(
+    name="eff", kind="eff", chips=1, peak_flops=90e12, hbm_bw=0.8e12,
+    ici_bw=50e9, power_peak_w=220.0, power_idle_w=8.0, overhead_s=0.02,
+    sat_ctx=2048.0, link_bw_gbps=100.0)
+LINKED_PERF = SystemProfile(
+    name="perf", kind="perf", chips=2, peak_flops=200e12, hbm_bw=1.25e12,
+    ici_bw=100e9, power_peak_w=350.0, power_idle_w=60.0, overhead_s=0.01,
+    sat_ctx=None, link_bw_gbps=100.0)
+
+
+def _all_schedulers():
+    counts = {EFF.name: 2, PERF.name: 2}
+    west = Region("w", {"eff": PoolSpec(EFF, instances=2, slots=2)})
+    east = Region("e", {"perf": PoolSpec(PERF, instances=2, slots=2)})
+    return [
+        ("threshold", ThresholdScheduler(CFG, EFF, PERF, t_in=32)),
+        ("cost_optimal", CostOptimalScheduler(CFG, [EFF, PERF])),
+        ("capacity_aware", CapacityAwareScheduler(CFG, [EFF, PERF], counts)),
+        ("disaggregated",
+         DisaggregatedScheduler(CFG, [LINKED_EFF, LINKED_PERF])),
+        ("single", SingleSystemScheduler(CFG, PERF)),
+        ("round_robin", RoundRobinScheduler(CFG, [EFF, PERF])),
+        ("carbon", CarbonAwareScheduler(CFG, [EFF, PERF])),
+        ("carbon_defer", CarbonAwareScheduler(CFG, [EFF, PERF], defer=True)),
+        ("global", GlobalDispatcher(CFG, [west, east])),
+    ]
+
+
+def _idle_fleet(sched):
+    return FleetState(pools={s.name: PoolSnapshot(system=s, block_size=16)
+                             for s in sched.systems})
+
+
+def _check_well_formed(plan, sched, q):
+    inner = plan.inner if isinstance(plan, DeferPlan) else plan
+    assert isinstance(inner, (RunPlan, SplitPlan))
+    names = {s.name for s in sched.systems}
+    if isinstance(inner, SplitPlan):
+        assert inner.pool_prefill in names and inner.pool_decode in names
+        assert inner.pool_prefill != inner.pool_decode
+        assert inner.mig_bytes > 0
+    else:
+        assert inner.pool in names
+    t = plan.terms
+    assert isinstance(t, PlanTerms), f"unpriced plan from {type(sched)}"
+    assert math.isfinite(t.energy_j) and t.energy_j > 0
+    assert math.isfinite(t.runtime_s) and t.runtime_s > 0
+    assert math.isfinite(t.wait_s) and t.wait_s >= 0
+    assert math.isfinite(t.cost)
+    if isinstance(plan, DeferPlan):
+        assert math.isfinite(plan.until_s)
+    # resolve_plan must accept it silently (no warning, no coercion change)
+    assert resolve_plan(plan, q, names) == plan
+
+
+@pytest.mark.parametrize("name,sched", _all_schedulers())
+def test_dispatch_returns_priced_plan(name, sched):
+    """Every policy, both snapshot and snapshotless paths, across query
+    shapes (interactive, prompt-heavy, batch-tier, zero-decode)."""
+    fleet = _idle_fleet(sched)
+    for q in (Query(16, 16, 0.0), Query(250, 50, 3600.0),
+              Query(64, 512, 7200.0), Query(64, 0, 10.0)):
+        for state in (fleet, None):
+            _check_well_formed(sched.dispatch(q, state), sched, q)
+
+
+@pytest.mark.parametrize("name,sched", _all_schedulers())
+def test_dispatch_rid_matches_dispatch(name, sched):
+    """Table-backed fast paths must price identically to scalar dispatch."""
+    if not hasattr(sched, "prepare_batch"):
+        pytest.skip("no batch tables")
+    qs = sample_workload(40, seed=5, spec=WorkloadSpec(mu_in=5.0, mu_out=3.5))
+    sched.prepare_batch(np.array([q.m for q in qs]),
+                        np.array([q.n for q in qs]))
+    fleet = _idle_fleet(sched)
+    for rid, q in enumerate(qs):
+        assert sched.dispatch_rid(rid, q, fleet) == sched.dispatch(q, fleet)
+
+
+# --------------------------------------------------------------- IR mechanics
+def test_json_round_trip_every_plan_kind():
+    terms = PlanTerms(energy_j=1.5, runtime_s=0.25, wait_s=2.0, cost=0.75)
+    plans = [
+        RunPlan("eff"),
+        RunPlan("perf", terms=terms),
+        SplitPlan("perf", "eff", mig_bytes=4096.0, terms=terms),
+        DeferPlan(1800.0, RunPlan("eff", terms=terms)),
+        DeferPlan(900.0, SplitPlan("perf", "eff", mig_bytes=16.0)),
+    ]
+    for plan in plans:
+        wire = json.dumps(plan_to_json(plan))       # truly serializable
+        assert plan_from_json(json.loads(wire)) == plan
+
+
+def test_defer_plans_do_not_nest():
+    with pytest.raises(TypeError):
+        DeferPlan(10.0, DeferPlan(5.0, RunPlan("eff")))
+    with pytest.raises(ValueError):
+        plan_from_json({"kind": "warp", "pool": "eff"})
+
+
+def test_as_plan_coerces_legacy_encodings_with_warning():
+    with pytest.warns(DeprecationWarning):
+        assert as_plan(EFF) == RunPlan(EFF.name)
+    with pytest.warns(DeprecationWarning):
+        assert as_plan((PERF, EFF)) == SplitPlan(PERF.name, EFF.name)
+    with pytest.raises(TypeError):
+        as_plan("eff")                  # a bare string is NOT a profile
+    # plans pass through silently and unchanged
+    p = DeferPlan(3.0, RunPlan("eff"))
+    assert as_plan(p) is p
+
+
+def test_resolve_plan_validates_and_degrades():
+    known = {"eff", "perf"}
+    with pytest.raises(KeyError, match="unknown system"):
+        resolve_plan(RunPlan("gone"), Query(8, 8), known)
+    # zero-decode split degrades to a RunPlan on the prefill pool and only
+    # that name is validated (historical engine semantics)
+    got = resolve_plan(SplitPlan("perf", "gone"), Query(8, 0), known)
+    assert got == RunPlan("perf")
+    got = resolve_plan(DeferPlan(9.0, SplitPlan("perf", "eff")),
+                       Query(8, 0), known)
+    assert got == DeferPlan(9.0, RunPlan("perf"))

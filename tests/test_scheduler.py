@@ -195,12 +195,12 @@ def test_capacity_aware_dispatch_pure_wrt_reservation_heap():
         sched.choose(q)
     assert {k: list(p.free_at) for k, p in sched.pools.items()} == heaps
     # observe commits exactly one booking on the committed system
-    s = sched.dispatch(q, None)
-    sched.observe(q, s)
+    plan = sched.dispatch(q, None)
+    sched.observe(q, plan)
     booked = {k: list(p.free_at) for k, p in sched.pools.items()}
     assert booked != heaps
     changed = [k for k in heaps if booked[k] != heaps[k]]
-    assert changed == [s.name]
+    assert changed == [plan.pool]
     # the offline path (assign/reserve) still books sequentially
     waits = [a.wait_s for a in
              CapacityAwareScheduler(CFG, [EFF, PERF],
